@@ -1,0 +1,50 @@
+"""Paper Fig. 1 / §2: linear vs quadratic attention cost. Wall-clock of
+exact softmax attention vs PRF linear attention (chunked kernel path and
+pure-jnp path) as sequence length grows, fixed m. Also the serving angle:
+decode state size O(m*dv) vs KV cache O(L*d)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (FeatureConfig, init_feature_params, rf_attention)
+from benchmarks.common import save_result, time_call
+
+
+def run(fast: bool = True) -> dict:
+    B, G, Hg, d, m = 1, 1, 4, 32, 64
+    lengths = (128, 256, 512, 1024) if fast else (128, 256, 512, 1024,
+                                                  2048, 4096)
+    cfg_lin = FeatureConfig(kind="darkformer", num_features=m)
+    fp = init_feature_params(jax.random.PRNGKey(0), cfg_lin, d, n_groups=G)
+    cfg_ex = FeatureConfig(kind="exact")
+    rows = []
+    for L in lengths:
+        kq, kk, kv = jax.random.split(jax.random.PRNGKey(L), 3)
+        q = jax.random.normal(kq, (B, G, Hg, L, d)) * 0.5
+        k = jax.random.normal(kk, (B, G, 1, L, d)) * 0.5
+        v = jax.random.normal(kv, (B, G, 1, L, d))
+        f_ex = jax.jit(lambda q, k, v: rf_attention(q, k, v, None, cfg_ex))
+        f_lin = jax.jit(lambda q, k, v: rf_attention(q, k, v, fp, cfg_lin))
+        t_ex = time_call(f_ex, q, k, v, iters=5)
+        t_lin = time_call(f_lin, q, k, v, iters=5)
+        rows.append({"L": L, "us_exact": t_ex, "us_linear": t_lin,
+                     "speedup": t_ex / t_lin})
+        print(f"  attn_scaling L={L}: exact={t_ex:.0f}us "
+              f"linear={t_lin:.0f}us speedup={t_ex/t_lin:.2f}x", flush=True)
+    # decode state: linear is O(m*dv) regardless of context
+    kv_bytes_32k = 2 * 32_768 * d * 4            # k+v cache, f32
+    lin_bytes = (m * d + m) * 4
+    out = {"rows": rows,
+           "kv_cache_bytes_32k_per_head": kv_bytes_32k,
+           "linear_state_bytes_per_head": lin_bytes,
+           "state_ratio": kv_bytes_32k / lin_bytes,
+           "us_per_call": rows[-1]["us_linear"],
+           "derived": rows[-1]["speedup"]}
+    save_result("attn_scaling", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("state compression at 32k:", round(r["state_ratio"], 1), "x")

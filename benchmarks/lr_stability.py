@@ -1,0 +1,59 @@
+"""Paper Fig. 5: training stability across learning rates. Finetune with a
+sweep of LRs; count loss spikes (step-to-step loss jumps above a
+threshold) and divergences. DARKFormer's Mahalanobis whitening tempers
+extreme dot products -> fewer spikes at large LR."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.models import lm
+from repro.data import SyntheticLM
+from benchmarks.common import (bench_cfg, train, transplant, save_result,
+                               SEQ, BATCH)
+from benchmarks.finetune_curves import pretrain_base
+
+LRS = (1e-3, 3e-3, 1e-2, 3e-2, 1e-1)
+
+
+def spikes(hist, jump=0.25):
+    losses = [h["loss"] for h in hist]
+    n = sum(1 for a, b in zip(losses, losses[1:])
+            if (b > a + jump) or not math.isfinite(b))
+    diverged = (not math.isfinite(losses[-1])) or losses[-1] > losses[0] + 1
+    return n, diverged
+
+
+def run(fast: bool = True, base=None) -> dict:
+    steps = 150 if fast else 600
+    cfg_e, p_exact, _ = base or pretrain_base(fast)
+    data = SyntheticLM(cfg_e.vocab, SEQ, BATCH, seed=7)
+    rows = []
+    for kernel in ("darkformer", "performer"):
+        for lr in LRS:
+            cfg = bench_cfg(kernel)
+            params = transplant(p_exact, lm.init_params(
+                jax.random.PRNGKey(1), cfg))
+            if kernel == "darkformer":
+                params = lm.whitening_calibrate(
+                    params, cfg, dict(data.batch(99_998)))
+            _, hist = train(cfg, steps, lr=lr, seed=1, params=params,
+                            warmup=5, record_every=2, eval_batches=1)
+            n_spikes, diverged = spikes(hist)
+            rows.append({"kernel": kernel, "lr": lr, "spikes": n_spikes,
+                         "diverged": diverged,
+                         "final_loss": hist[-1]["loss"]})
+            print(f"  lr_stability[{kernel} lr={lr}]: spikes={n_spikes} "
+                  f"diverged={diverged}", flush=True)
+    tot = {k: sum(r["spikes"] for r in rows if r["kernel"] == k)
+           for k in ("darkformer", "performer")}
+    out = {"rows": rows, "total_spikes": tot, "us_per_call": 0.0,
+           "derived": tot["performer"] - tot["darkformer"]}
+    save_result("lr_stability", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("total spikes:", r["total_spikes"])

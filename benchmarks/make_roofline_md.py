@@ -1,0 +1,35 @@
+"""Render EXPERIMENTS.md §Roofline table from the dry-run artifacts."""
+from __future__ import annotations
+
+from benchmarks.roofline import load_all
+
+
+def main():
+    rows = load_all(mesh="pod")
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2,
+             "long_500k": 3}
+    rows.sort(key=lambda r: (r["arch"], order.get(r["shape"], 9)))
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "dominant | useful | roofline |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+              f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+              f"{r['dominant']} | {r['model_flops_ratio']:.2f} | "
+              f"{r['roofline_frac']:.3f} |")
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    print()
+    print("dominant-term census:", doms)
+    tr = [r for r in rows if r["shape"] == "train_4k"]
+    if tr:
+        best = max(tr, key=lambda r: r["roofline_frac"])
+        worst = min(tr, key=lambda r: r["roofline_frac"])
+        print(f"train cells roofline: best {best['arch']} "
+              f"{best['roofline_frac']:.3f}, worst {worst['arch']} "
+              f"{worst['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

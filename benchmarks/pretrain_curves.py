@@ -1,0 +1,40 @@
+"""Paper Fig. 2 (top): pretraining accuracy, all six attention kernels.
+
+DARKFormer vs Performer vs LFK vs exact softmax vs random/constant
+baselines, identical data/hyperparameters (paper §6). Reduced scale: the
+bench model from benchmarks.common, small feature budget m=16.
+"""
+from __future__ import annotations
+
+from benchmarks.common import bench_cfg, train, save_result
+
+KERNELS = ("exact", "darkformer", "performer", "lfk", "random", "constant")
+
+
+def run(fast: bool = True, steps: int = None) -> dict:
+    steps = steps or (250 if fast else 1200)
+    curves = {}
+    for kernel in KERNELS:
+        cfg = bench_cfg(kernel)
+        _, hist = train(cfg, steps, lr=3e-3, seed=0)
+        curves[kernel] = hist
+        print(f"  pretrain[{kernel}]: final eval_acc="
+              f"{hist[-1]['eval_accuracy']:.4f} loss={hist[-1]['loss']:.4f}",
+              flush=True)
+    final = {k: v[-1]["eval_accuracy"] for k, v in curves.items()}
+    # headline: how much of the performer->exact gap darkformer closes
+    gap_perf = final["exact"] - final["performer"]
+    gap_dark = final["exact"] - final["darkformer"]
+    closed = 1.0 - gap_dark / gap_perf if abs(gap_perf) > 1e-9 else 0.0
+    us = sum(h["dt"] for h in curves["darkformer"][1:]) / max(
+        1, len(curves["darkformer"]) - 1) * 1e6
+    out = {"curves": curves, "final": final, "gap_closed": closed,
+           "us_per_call": us, "derived": closed}
+    save_result("pretrain_curves", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("final:", {k: round(v, 4) for k, v in r["final"].items()})
+    print("gap closed by darkformer:", round(r["gap_closed"], 3))

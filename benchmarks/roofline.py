@@ -1,0 +1,163 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+from the compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+    memory term     = HLO_bytes_per_device / HBM_bw_per_chip
+    collective term = collective_bytes_per_device / ICI_bw_per_chip
+
+Notes:
+  * compiled.cost_analysis() on an SPMD-partitioned module reports
+    PER-DEVICE flops/bytes (verified: smollm train_4k reports 3.58e12 vs
+    8.5e14 global = 6ND), so no chips division is needed beyond per-chip
+    peaks.
+  * collective_bytes comes from summing result-shape bytes of every
+    all-gather / all-reduce / reduce-scatter / all-to-all /
+    collective-permute in the optimized HLO (received-bytes
+    approximation).
+  * MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) global per step,
+    divided by chips for the per-device "useful" figure.
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (3D-torus; one-link figure used, consistent across
+cells so relative comparisons hold).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link / chip
+
+DRYRUN_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "dryrun")
+
+# active params per token (N or N_active), for MODEL_FLOPS = 6*N*D
+ACTIVE_PARAMS = {
+    "recurrentgemma-2b": 2.7e9,
+    "smollm-135m": 1.35e8,
+    "granite-8b": 8.1e9,
+    "qwen3-32b": 3.28e10,
+    "yi-34b": 3.44e10,
+    "rwkv6-7b": 7.6e9,
+    "granite-moe-3b-a800m": 8.0e8,        # a800m active
+    "qwen3-moe-235b-a22b": 2.2e10,        # a22b active
+    "internvl2-76b": 7.0e10,
+    "hubert-xlarge": 9.6e8,
+    "darkformer-2b": 2.5e9,
+}
+
+
+def n_chips(rec: dict) -> int:
+    m = rec.get("mesh", {})
+    n = 1
+    for v in m.values():
+        n *= v
+    return n
+
+
+def model_flops(rec: dict) -> float:
+    """6 * N_active * tokens, global per step (train fwd+bwd). For
+    prefill (fwd only) use 2*N*D; decode: 2*N_active*B tokens."""
+    act = ACTIVE_PARAMS.get(rec["arch"], 0.0)
+    kind = rec["kind"]
+    if kind == "train":
+        toks = rec["global_batch"] * rec["seq_len"]
+        return 6.0 * act * toks
+    if kind == "prefill":
+        toks = rec["global_batch"] * rec["seq_len"]
+        return 2.0 * act * toks
+    toks = rec["global_batch"]          # one token per sequence
+    return 2.0 * act * toks
+
+
+def analyze(rec: dict, probe: Optional[dict] = None) -> Optional[dict]:
+    if rec.get("status") != "ok":
+        return None
+    chips = n_chips(rec)
+    fl = rec.get("flops", 0.0)                      # per-device
+    by = rec.get("bytes_accessed", 0.0)             # per-device
+    coll = rec.get("collectives", {}).get("total", 0.0)
+    if probe and probe.get("status") == "ok":
+        # exact scan-aware costs from the 2-point unrolled probe (XLA's
+        # HloCostAnalysis counts while bodies once; see dryrun.py)
+        e = probe["extrapolated"]
+        fl = e["flops"]
+        by = e["bytes_accessed"]
+        coll = e["collective_total"]
+    t_compute = fl / PEAK_FLOPS
+    t_memory = by / HBM_BW
+    t_coll = coll / ICI_BW
+    terms = {"compute": t_compute, "memory": t_memory,
+             "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec) / chips                   # useful per-device
+    useful = mf / fl if fl else 0.0
+    bound = max(terms.values())
+    # roofline fraction: useful model flops at peak / bound time
+    frac = (mf / PEAK_FLOPS) / bound if bound > 0 else 0.0
+    return {"arch": rec["arch"], "shape": rec["shape"],
+            "mesh": "x".join(str(v) for v in rec.get("mesh", {}).values()),
+            "chips": chips,
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops_ratio": useful, "roofline_frac": frac,
+            "probed": bool(probe and probe.get("status") == "ok"),
+            "compile_s": rec.get("compile_s")}
+
+
+def load_all(outdir: str = DRYRUN_DIR, mesh: str = "pod",
+             tag: str = "") -> list[dict]:
+    rows = []
+    suffix = f"__{mesh}" + (f"__{tag}" if tag else "") + ".json"
+    for path in sorted(glob.glob(os.path.join(outdir, f"*{suffix}"))):
+        base = os.path.basename(path)[: -len(".json")]
+        parts = base.split("__")
+        if tag and (len(parts) < 4 or parts[3] != tag):
+            continue
+        if not tag and len(parts) > 3:
+            continue
+        with open(path) as f:
+            rec = json.load(f)
+        probe = None
+        ppath = os.path.join(outdir, f"{parts[0]}__{parts[1]}__probe.json")
+        if os.path.exists(ppath):
+            with open(ppath) as f:
+                probe = json.load(f)
+        a = analyze(rec, probe)
+        if a:
+            rows.append(a)
+    return rows
+
+
+def fmt_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} {'compute_s':>10s} "
+           f"{'memory_s':>10s} {'coll_s':>10s} {'dominant':>10s} "
+           f"{'useful':>7s} {'roofline':>9s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+            f"{r['t_compute_s']:10.3e} {r['t_memory_s']:10.3e} "
+            f"{r['t_collective_s']:10.3e} {r['dominant']:>10s} "
+            f"{r['model_flops_ratio']:7.3f} {r['roofline_frac']:9.3f}")
+    return "\n".join(lines)
+
+
+def run(fast: bool = True) -> dict:
+    rows = load_all(mesh="pod")
+    out = {"rows": rows, "us_per_call": 0.0,
+           "derived": (sorted(r["roofline_frac"] for r in rows
+                              if r["shape"] == "train_4k") or [0.0])[0]}
+    return out
+
+
+if __name__ == "__main__":
+    rows = load_all(mesh="pod")
+    print(fmt_table(rows))
+    print()
+    rows_mp = load_all(mesh="multipod")
+    print(fmt_table(rows_mp))

@@ -1,0 +1,67 @@
+"""Benchmark driver — one entry per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. Each benchmark caches its payload
+under experiments/bench/<name>.json; pass --force to recompute, --full for
+the long (paper-scale-down) versions. The roofline rows come from the
+dry-run artifacts (run ``python -m repro.launch.dryrun --all [--probe]``
+first; this repo ships the cached results).
+
+  variance         Thm 3.2: E[Var] ratio Sigma*/isotropic @ max anisotropy
+  approx_error     Lemma 3.1 at kernel+attention level vs feature budget
+  kernel_fidelity  kernel swap on real pretrained activations (KL vs m)
+  pretrain_curves  Fig 2 top: 6 kernels from scratch (gap closed)
+  finetune_curves  Fig 2 bottom: finetune from exact-attn checkpoint
+  finetune_long    Fig 3: long-cycle finetune (early vs late gap)
+  finetune_limited Fig 4: q/k/v + covariance-only finetune
+  lr_stability     Fig 5: loss spikes across LR sweep (perf - dark)
+  attn_scaling     Fig 1: exact vs linear attention wall time
+  serve_latency    O(1)-state decode vs KV decode across context lengths
+  roofline_*       §Roofline: worst train-cell roofline fraction
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import sys
+import traceback
+
+from benchmarks import common
+
+BENCHES = ("variance", "approx_error", "kernel_fidelity",
+           "pretrain_curves",
+           "finetune_curves", "finetune_long", "finetune_limited",
+           "lr_stability", "attn_scaling", "serve_latency", "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated bench names")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="long versions (hours on CPU)")
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else BENCHES
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in names:
+        try:
+            cached = None if (args.force or args.full) else \
+                common.load_result(name)
+            if cached is not None:
+                out = cached
+            else:
+                mod = importlib.import_module(f"benchmarks.{name}")
+                out = mod.run(fast=not args.full)
+            print(f"{name},{out.get('us_per_call', 0.0):.1f},"
+                  f"{out.get('derived', 0.0):.6g}", flush=True)
+        except Exception as e:
+            failures += 1
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR:{type(e).__name__}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Serving latency vs context length: PRF O(1)-state decode wall-clock is
+flat in context, exact-attention KV decode grows. (The at-scale version is
+the decode_32k == long_500k equality in the §Roofline table; this is the
+measured-on-CPU reduced-model counterpart.)"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgs
+from repro.models import lm
+from benchmarks.common import save_result, time_call
+
+
+def run(fast: bool = True) -> dict:
+    cfg_lin = cfgs.get_config("smollm-135m", reduced=True)
+    cfg_ex = cfgs.darkify(cfg_lin, "exact")
+    params = lm.init_params(jax.random.PRNGKey(0), cfg_lin)
+    params_e = lm.init_params(jax.random.PRNGKey(0), cfg_ex)
+    tok = jnp.zeros((2,), jnp.int32)
+    rows = []
+    for ctx in (256, 1024, 4096) if fast else (256, 1024, 4096, 16384):
+        st_l = lm.init_serve_state(cfg_lin, b=2, max_len=ctx)
+        st_e = lm.init_serve_state(cfg_ex, b=2, max_len=ctx)
+        dec_l = jax.jit(lambda p, t, s: lm.decode_step(p, cfg_lin, t, s))
+        dec_e = jax.jit(lambda p, t, s: lm.decode_step(p, cfg_ex, t, s))
+        # warm the states to mid-context so exact attends over ctx/2 keys
+        st_e["pos"] = jnp.asarray(ctx // 2, jnp.int32)
+        us_l = time_call(lambda: dec_l(params, tok, st_l)[0], iters=8)
+        us_e = time_call(lambda: dec_e(params_e, tok, st_e)[0], iters=8)
+        rows.append({"ctx": ctx, "us_linear": us_l, "us_exact": us_e})
+        print(f"  serve ctx={ctx}: linear={us_l:.0f}us exact={us_e:.0f}us",
+              flush=True)
+    flat = rows[-1]["us_linear"] / max(rows[0]["us_linear"], 1e-9)
+    grow = rows[-1]["us_exact"] / max(rows[0]["us_exact"], 1e-9)
+    out = {"rows": rows, "linear_growth": flat, "exact_growth": grow,
+           "us_per_call": rows[-1]["us_linear"],
+           "derived": grow / max(flat, 1e-9)}
+    save_result("serve_latency", out)
+    return out
+
+
+if __name__ == "__main__":
+    r = run()
+    print("linear growth:", round(r["linear_growth"], 2),
+          " exact growth:", round(r["exact_growth"], 2))

@@ -1,0 +1,48 @@
+"""Fault-tolerant training: checkpoint/restart with an injected failure,
+straggler monitoring, and an elastic-shrink plan — the 1000-node posture
+exercised end to end on CPU.
+
+    PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FeatureConfig
+from repro.data import SyntheticLM
+from repro.launch.steps import make_train_step
+from repro.models import ModelConfig, init_params
+from repro.optim import AdamWConfig, adamw_init
+from repro.optim.schedules import constant
+from repro.runtime import (TrainSupervisor, StragglerMonitor,
+                           elastic_shrink_plan)
+
+cfg = ModelConfig(name="ft-demo", n_layers=2, d_model=48, n_heads=4,
+                  n_kv=2, d_ff=96, vocab=128, remat="none",
+                  attn=FeatureConfig(kind="darkformer", num_features=16))
+opt_cfg = AdamWConfig(lr=1e-3)
+params = init_params(jax.random.PRNGKey(0), cfg)
+state = {"params": params, "opt": adamw_init(params, opt_cfg)}
+data = SyntheticLM(cfg.vocab, 32, 4)
+jstep = jax.jit(make_train_step(cfg, opt_cfg, constant(1e-3)))
+
+
+def step_fn(state, i):
+    p, o, m = jstep(state["params"], state["opt"], dict(data.batch(i)),
+                    jnp.int32(i))
+    if i % 10 == 0:
+        print(f"  step {i:3d} loss {float(m['loss']):.4f}")
+    return {"params": p, "opt": o}
+
+
+with tempfile.TemporaryDirectory() as ckpt_dir:
+    sup = TrainSupervisor(ckpt_dir, ckpt_every=10,
+                          monitor=StragglerMonitor(threshold=3.0))
+    print("training 40 steps with a simulated node failure at step 25:")
+    final = sup.run(state, step_fn, 40, fail_at=25)
+    print("recovered and completed; stragglers flagged:",
+          sup.monitor.straggler_steps)
+
+print("elastic plan after losing 3 hosts from a (16,16) mesh:",
+      elastic_shrink_plan((16, 16), ("data", "model"), 3))

@@ -1,0 +1,4 @@
+"""Checkpointing: msgpack pytree snapshots, atomic, keep-k, elastic restore."""
+from repro.checkpoint.store import (save_checkpoint, restore_checkpoint,
+                                    latest_step, all_steps,
+                                    restore_to_shardings)

@@ -1,0 +1,144 @@
+"""Msgpack pytree checkpoints (no orbax in this container).
+
+Layout:  <dir>/step_<N>/state.msgpack   (+ DONE marker)
+Guarantees:
+  * atomic: written to step_<N>.tmp-<pid>, fsync'd, then os.replace'd —
+    a crash mid-write never corrupts the latest checkpoint;
+  * keep-last-k garbage collection;
+  * multi-host: only process 0 writes (others return); restore is
+    host-local (all hosts read the same file — fine for replicated or
+    host-sharded reload via ``restore_to_shardings``);
+  * elastic: ``restore_to_shardings`` device_puts each leaf with a target
+    NamedSharding, so a checkpoint written on one mesh reloads onto any
+    other mesh topology (shrunk/grown cluster) — the resharding collective
+    is XLA's problem, not ours.
+
+Arrays are stored as (dtype, shape, raw bytes); the pytree structure is
+serialized from tree paths, so save/restore does not need an example tree
+(but will validate against one if given).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out[key] = np.asarray(jax.device_get(leaf))
+    return out
+
+
+def _pack_leaf(arr: np.ndarray) -> dict:
+    return {"dtype": str(arr.dtype), "shape": list(arr.shape),
+            "data": arr.tobytes()}
+
+
+def _unpack_leaf(rec: dict) -> np.ndarray:
+    return np.frombuffer(rec["data"], dtype=np.dtype(rec["dtype"])).reshape(
+        rec["shape"])
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree: PyTree,
+                    keep: int = 3) -> str:
+    """Write step checkpoint atomically; GC to the newest ``keep``."""
+    if jax.process_index() != 0:
+        return os.path.join(ckpt_dir, f"step_{step}")
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    tmp = final + f".tmp-{os.getpid()}"
+    os.makedirs(tmp, exist_ok=True)
+    payload = {k: _pack_leaf(v) for k, v in _flatten(tree).items()}
+    fpath = os.path.join(tmp, "state.msgpack")
+    with open(fpath, "wb") as f:
+        f.write(msgpack.packb(payload, use_bin_type=True))
+        f.flush()
+        os.fsync(f.fileno())
+    open(os.path.join(tmp, "DONE"), "w").close()
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: str, keep: int) -> None:
+    steps = all_steps(ckpt_dir)
+    for s in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and "tmp" not in name:
+            full = os.path.join(ckpt_dir, name)
+            if os.path.exists(os.path.join(full, "DONE")):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = all_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _load_payload(ckpt_dir: str, step: int) -> dict[str, np.ndarray]:
+    fpath = os.path.join(ckpt_dir, f"step_{step}", "state.msgpack")
+    with open(fpath, "rb") as f:
+        payload = msgpack.unpackb(f.read(), raw=False)
+    return {k: _unpack_leaf(v) for k, v in payload.items()}
+
+
+def restore_checkpoint(ckpt_dir: str, target: PyTree,
+                       step: Optional[int] = None) -> tuple[PyTree, int]:
+    """Restore into the structure of ``target``. Returns (tree, step)."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
+    data = _load_payload(ckpt_dir, step)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    leaves = []
+    for path, leaf in paths:
+        key = jax.tree_util.keystr(path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(jnp.shape(leaf)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs target "
+                f"{jnp.shape(leaf)}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype if hasattr(
+            leaf, "dtype") else arr.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves), step
+
+
+def restore_to_shardings(ckpt_dir: str, target: PyTree, shardings: PyTree,
+                         step: Optional[int] = None) -> tuple[PyTree, int]:
+    """Elastic restore: place every leaf with its target NamedSharding.
+
+    ``shardings`` mirrors ``target`` (leaves = jax.sharding.Sharding).
+    Works across mesh topologies — this is the restart-after-resize path.
+    """
+    tree, step = restore_checkpoint(ckpt_dir, target, step)
+    placed = jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), tree, shardings)
+    return placed, step

@@ -1,0 +1,26 @@
+"""Shared config helpers + the shape-cell table assigned to this paper."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.feature_maps import FeatureConfig
+from repro.models import ModelConfig, MoEConfig
+
+# The four assigned input-shape cells (LM family).
+SHAPES = {
+    "train_4k":    dict(seq_len=4_096,   global_batch=256, kind="train"),
+    "prefill_32k": dict(seq_len=32_768,  global_batch=32,  kind="prefill"),
+    "decode_32k":  dict(seq_len=32_768,  global_batch=128, kind="decode"),
+    "long_500k":   dict(seq_len=524_288, global_batch=1,   kind="decode"),
+}
+
+DEFAULT_ATTN = FeatureConfig(kind="darkformer", num_features=256,
+                             orthogonal=True)
+
+
+def darkify(cfg: ModelConfig, kind: str = "darkformer",
+            num_features: int = 256) -> ModelConfig:
+    """Switch a config's attention kernel (exact <-> PRF variants)."""
+    return dataclasses.replace(
+        cfg, attn=dataclasses.replace(cfg.attn, kind=kind,
+                                      num_features=num_features))

@@ -1,0 +1,25 @@
+"""internvl2-76b — VLM: InternViT frontend (STUB) + LM backbone.
+
+[arXiv:2404.16821] backbone 80L d_model=8192 64H (GQA kv=8, d_head=128)
+d_ff=28672 vocab=128256. Per the brief, the vision frontend is a stub:
+input_specs provides precomputed patch embeddings (B, 256, d_model).
+"""
+from repro.configs.base import DEFAULT_ATTN
+from repro.models import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b", n_layers=80, d_model=8192, n_heads=64,
+        n_kv=8, d_head=128, d_ff=28_672, vocab=128_256, attn=DEFAULT_ATTN,
+        modality="vlm", num_patches=256, mlp_kind="swiglu",
+        tie_embeddings=False, dtype="bfloat16")
+
+
+def reduced() -> ModelConfig:
+    return ModelConfig(
+        name="internvl2-76b-smoke", n_layers=2, d_model=64, n_heads=4,
+        n_kv=2, d_head=16, d_ff=128, vocab=256, modality="vlm",
+        num_patches=8,
+        attn=DEFAULT_ATTN.__class__(kind="darkformer", num_features=32),
+        tie_embeddings=False, remat="none")

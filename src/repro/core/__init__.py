@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — data-aware random-feature attention."""
+from repro.core.feature_maps import (FeatureConfig, FEATURE_KINDS,
+                                     gaussian_projection,
+                                     orthogonal_projection, draw_projection,
+                                     init_feature_params, whitening_init)
+from repro.core.attention import (rf_attention, rf_attention_prefill,
+                                  rf_attention_decode, AttnServeState,
+                                  init_linear_serve_state)
+from repro.core.linear_attention import (
+    exact_attention, linear_attention_noncausal,
+    linear_attention_causal_naive, linear_attention_causal_chunked,
+    linear_attention_prefill, linear_attention_decode, LinearState,
+    sequence_parallel_state_combine)
+from repro.core import variance
+from repro.core import calibration

@@ -1,0 +1,219 @@
+"""The paper's attention mechanism as one composable entry point.
+
+``rf_attention`` dispatches on FeatureConfig.kind:
+
+  exact       -> softmax attention (optionally sliding-window)
+  performer   -> isotropic PRF linear attention (Choromanski 2021)
+  darkformer  -> data-aware PRF linear attention (this paper)
+  lfk         -> learned-feature-kernel linear attention (paper baseline)
+  random      -> fixed random attention weights (paper baseline)
+  constant    -> uniform attention (paper baseline)
+
+plus the serving variants (prefill / decode).
+
+Layout: q is (B, G, Hg, L, d) — G KV groups (GQA), Hg query heads per
+group; k, v are (B, G, 1, L, d). Feature params are per group:
+{"w": (G, m, r), "m_mat": (G, r, d)}.
+
+Numerical-stability contract for PRFs (exp of raw logits):
+  * q features: any per-(b,g,h,position) scale cancels in num/den — we use a
+    per-(b,g,h) max.
+  * k features: the scale must be CONSTANT ACROSS POSITIONS to preserve the
+    relative weights. Training/prefill uses one max over (L, m); decode
+    carries a running max ``c`` in the state and rescales (S, z) by
+    exp(c_old - c_new) when a new key exceeds it — the linear-attention
+    analogue of online-softmax rescaling.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import feature_maps as fm
+from repro.core import linear_attention as la
+
+Array = jax.Array
+
+
+def _scale_qk(q: Array, k: Array) -> tuple[Array, Array]:
+    """Absorb the 1/sqrt(d) softmax temperature symmetrically (paper fn. 2)."""
+    d = q.shape[-1]
+    s = d ** -0.25
+    return q * s, k * s
+
+
+def _raw_logits(x: Array, fparams: dict, kind: str) -> Array:
+    """PRF pre-exp logits: w.x - ||x||^2/2 (iso/lfk) or w.(Mx) - ||Mx||^2/2.
+
+    x: (B, G, H, L, d) -> (B, G, H, L, m), f32.
+
+    Trainability contract (paper §6): the projection W is a FIXED random
+    draw for performer and darkformer (stop-gradient); only the LFK
+    baseline trains W directly, and only darkformer trains M (= the
+    learned covariance Sigma = M^T M).
+    """
+    w = fparams["w"].astype(jnp.float32)              # (G, m, r)
+    if kind != "lfk":
+        w = jax.lax.stop_gradient(w)
+    x = x.astype(jnp.float32)
+    if kind == "darkformer":
+        m_mat = fparams["m_mat"].astype(jnp.float32)  # (G, r, d)
+        x = jnp.einsum("bghld,grd->bghlr", x, m_mat)
+    elif kind not in ("performer", "lfk"):
+        raise ValueError(f"unsupported feature kind {kind!r}")
+    return (jnp.einsum("bghlr,gmr->bghlm", x, w)
+            - 0.5 * jnp.sum(jnp.square(x), axis=-1, keepdims=True))
+
+
+def _stab_max(raw: Array, enabled: bool) -> Array:
+    if not enabled:
+        return jnp.zeros(raw.shape[:-2] + (1, 1), raw.dtype)
+    return jax.lax.stop_gradient(
+        jnp.max(raw, axis=(-2, -1), keepdims=True))
+
+
+def _qk_feature_pair(q, k, fparams, cfg: fm.FeatureConfig):
+    """q:(B,G,Hg,L,d), k:(B,G,1,L,d) -> qf:(B,G,Hg,L,m), kf:(B,G,1,L,m)."""
+    inv_sqrt_m = cfg.num_features ** -0.5
+    qraw = _raw_logits(q, fparams, cfg.kind)
+    kraw = _raw_logits(k, fparams, cfg.kind)
+    qf = jnp.exp(qraw - _stab_max(qraw, cfg.stabilize)) * inv_sqrt_m
+    kc = _stab_max(kraw, cfg.stabilize)
+    kf = jnp.exp(kraw - kc) * inv_sqrt_m
+    return qf, kf, kc
+
+
+def rf_attention(q: Array, k: Array, v: Array, fparams: Optional[dict],
+                 cfg: fm.FeatureConfig, *, causal: bool = True,
+                 window: Optional[int] = None, chunk: int = 256,
+                 use_kernel: bool = False,
+                 baseline_key: Optional[Array] = None) -> Array:
+    """Training-time attention. Returns (B, G, Hg, L, dv)."""
+    b, g, hg, l, _ = q.shape
+    dv = v.shape[-1]
+    if cfg.kind == "exact":
+        qs, ks = _scale_qk(q, k)
+        return la.exact_attention(qs, ks, v, causal=causal, window=window)
+    if cfg.kind == "constant":
+        out = la.constant_attention(v, causal=causal)
+        return jnp.broadcast_to(out, (b, g, hg, l, dv))
+    if cfg.kind == "random":
+        assert baseline_key is not None, "random baseline needs a key"
+        out = la.random_attention(baseline_key, v, causal=causal)
+        return jnp.broadcast_to(out, (b, g, hg, l, dv))
+
+    qs, ks = _scale_qk(q, k)
+    qf, kf, _ = _qk_feature_pair(qs, ks, fparams, cfg)
+    kf = jnp.broadcast_to(kf, (b, g, hg, l, cfg.num_features))
+    vv = jnp.broadcast_to(v, (b, g, hg, l, dv))
+    if not causal:
+        return la.linear_attention_noncausal(qf, kf, vv, eps=cfg.eps)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        return kops.linear_attention_causal(qf, kf, vv, eps=cfg.eps)
+    return la.linear_attention_causal_chunked(qf, kf, vv, chunk=chunk,
+                                              eps=cfg.eps)
+
+
+class AttnServeState(NamedTuple):
+    """Serving state.
+
+    exact  — KV cache (B, G, Lmax, d) + write index.
+    linear — running (S, z) plus the running k-stabilizer ``c``.
+    """
+    kv_k: Optional[Array] = None
+    kv_v: Optional[Array] = None
+    length: Optional[Array] = None          # () int32
+    s: Optional[Array] = None               # (B, G, Hg, m, dv) f32
+    z: Optional[Array] = None               # (B, G, Hg, m)     f32
+    c: Optional[Array] = None               # (B, G, 1, 1, 1)   f32
+
+
+def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
+                         window: Optional[int] = None, chunk: int = 256,
+                         max_len: Optional[int] = None,
+                         use_kernel: bool = False):
+    """Prefill: full causal pass over the prompt + serving state."""
+    b, g, hg, l, _ = q.shape
+    dv = v.shape[-1]
+    if cfg.kind == "exact":
+        qs, ks = _scale_qk(q, k)
+        out = la.exact_attention(qs, ks, v, causal=True, window=window)
+        lmax = max_len or l
+        kc = jnp.pad(ks[:, :, 0], ((0, 0), (0, 0), (0, lmax - l), (0, 0)))
+        vc = jnp.pad(v[:, :, 0], ((0, 0), (0, 0), (0, lmax - l), (0, 0)))
+        state = AttnServeState(kv_k=kc, kv_v=vc,
+                               length=jnp.full((), l, jnp.int32))
+        return out, state
+    qs, ks = _scale_qk(q, k)
+    qf, kf, kc = _qk_feature_pair(qs, ks, fparams, cfg)
+    kfb = jnp.broadcast_to(kf, (b, g, hg, l, cfg.num_features))
+    vv = jnp.broadcast_to(v, (b, g, hg, l, dv))
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out = kops.linear_attention_causal(qf, kfb, vv, eps=cfg.eps)
+    else:
+        out = la.linear_attention_causal_chunked(qf, kfb, vv, chunk=chunk,
+                                                 eps=cfg.eps)
+    s = jnp.einsum("bghlm,bghld->bghmd", kfb.astype(jnp.float32),
+                   vv.astype(jnp.float32))
+    z = jnp.sum(kfb.astype(jnp.float32), axis=-2)
+    return out, AttnServeState(s=s, z=z, c=kc)
+
+
+def init_linear_serve_state(b, g, hg, m, dv) -> AttnServeState:
+    return AttnServeState(
+        s=jnp.zeros((b, g, hg, m, dv), jnp.float32),
+        z=jnp.zeros((b, g, hg, m), jnp.float32),
+        c=jnp.full((b, g, 1, 1, 1), -1e30, jnp.float32))
+
+
+def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
+                        cfg: fm.FeatureConfig, *,
+                        window: Optional[int] = None):
+    """One-token decode. q: (B,G,Hg,1,d); k,v: (B,G,1,1,d)."""
+    b, g, hg, _, _ = q.shape
+    dv = v.shape[-1]
+    if cfg.kind == "exact":
+        qs, ks = _scale_qk(q, k)
+        idx = state.length
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            state.kv_k, ks[:, :, 0], idx, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            state.kv_v, v[:, :, 0], idx, axis=2)
+        lmax = kc.shape[2]
+        pos = jnp.arange(lmax)
+        valid = pos <= idx
+        if window is not None:
+            valid &= pos > idx - window
+        logits = jnp.einsum("bghqd,bgkd->bghqk", qs, kc).astype(jnp.float32)
+        logits = jnp.where(valid[None, None, None, None, :], logits,
+                           jnp.finfo(jnp.float32).min)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(v.dtype)
+        return out, state._replace(kv_k=kc, kv_v=vc, length=idx + 1)
+
+    qs, ks = _scale_qk(q, k)
+    inv_sqrt_m = cfg.num_features ** -0.5
+    qraw = _raw_logits(qs, fparams, cfg.kind)      # (B,G,Hg,1,m)
+    kraw = _raw_logits(ks, fparams, cfg.kind)      # (B,G,1,1,m)
+    # q scale cancels per step; use a local max.
+    qf = jnp.exp(qraw - _stab_max(qraw, cfg.stabilize)) * inv_sqrt_m
+    # Online rescale of the k stabilizer (see module docstring).
+    k_max = jnp.max(kraw, axis=(-3, -2, -1), keepdims=True)  # (B,G,1,1,1)
+    c_new = jnp.maximum(state.c, jax.lax.stop_gradient(k_max)) \
+        if cfg.stabilize else state.c
+    rescale = jnp.exp(state.c - c_new)             # <= 1
+    kf = jnp.exp(kraw - c_new) * inv_sqrt_m        # (B,G,1,1,m)
+    kfb = jnp.broadcast_to(kf[:, :, :, 0], (b, g, hg, cfg.num_features))
+    vv = jnp.broadcast_to(v[:, :, :, 0], (b, g, hg, dv))
+    s = state.s * rescale + (
+        kfb[..., :, None] * vv[..., None, :].astype(jnp.float32))
+    z = state.z * rescale[..., 0] + kfb
+    qf1 = qf[..., 0, :]                            # (B,G,Hg,m)
+    num = jnp.einsum("bghm,bghmd->bghd", qf1, s)
+    den = jnp.einsum("bghm,bghm->bgh", qf1, z)
+    out = (num / (den[..., None] + cfg.eps)).astype(v.dtype)
+    return out[..., None, :], state._replace(s=s, z=z, c=c_new)

@@ -1,0 +1,234 @@
+"""Positive random feature (PRF) maps — the paper's core objects.
+
+Implements, as pure functions over explicit parameter pytrees:
+
+  * ``performer``  — isotropic PRFs, Choromanski et al. 2021 (Eq. 1):
+        phi(x) = exp(W x - ||x||^2 / 2 - c) / sqrt(m),  W ~ N(0, I)  (rows)
+  * ``darkformer`` — data-aware PRFs with learned covariance Sigma = M^T M
+    (paper Eq. 3). Realized through the identity  phi_Sigma(x) = phi_iso(M x):
+        x~ = M x;  phi(x) = exp(W x~ - ||x~||^2 / 2 - c) / sqrt(m)
+    which draws omega~ = M^T w,  w ~ N(0, I_r), i.e. omega~ ~ N(0, Sigma) and
+    is unbiased for exp(q^T Sigma k).
+  * ``lfk``        — learned feature kernel baseline: W itself is trainable.
+  * ``trig``       — trigonometric random features (background §2), for
+    reference/benchmarks only.
+
+All maps share the numerical stabilizer ``c``: PRFs are exp() of possibly
+large logits; we subtract a data-dependent max (stop-gradiented) exactly like
+the Performer reference implementation. The stabilizer cancels in the
+attention normalization (it multiplies numerator and denominator equally) so
+the attention output is exact in infinite precision.
+
+Shapes (single head):
+  x : (..., L, d)       queries or keys (scaling by d^{-1/4} pre-applied
+                        by the caller so that q'k' = qk/sqrt(d))
+  W : (m, r)            projection matrix (feature space)
+  M : (r, d)            DARKFormer re-embedding (Sigma = M^T M), r <= d
+  out: (..., L, m)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+FEATURE_KINDS = ("exact", "performer", "darkformer", "lfk", "trig",
+                 "random", "constant")
+
+
+@dataclasses.dataclass(frozen=True)
+class FeatureConfig:
+    """Configuration of the random-feature attention kernel."""
+    kind: str = "darkformer"         # one of FEATURE_KINDS
+    num_features: int = 256          # m
+    feature_rank: int = 0            # r for DARKFormer; 0 -> r = d_head
+    orthogonal: bool = True          # blockwise-orthogonal W (Performer trick)
+    stabilize: bool = True           # subtract running max before exp
+    eps: float = 1e-8                # denominator floor (f32 accumulators;
+                                     # keep small — the stabilizer shrinks
+                                     # denominators by exp(-c))
+    redraw: bool = False             # redraw W each step (training) or fix
+
+    def rank(self, d_head: int) -> int:
+        return self.feature_rank if self.feature_rank > 0 else d_head
+
+
+# ---------------------------------------------------------------------------
+# Projection-matrix construction
+# ---------------------------------------------------------------------------
+
+def gaussian_projection(key: Array, m: int, r: int,
+                        dtype=jnp.float32) -> Array:
+    """Plain iid N(0,1) projection rows, shape (m, r)."""
+    return jax.random.normal(key, (m, r), dtype=dtype)
+
+
+def orthogonal_projection(key: Array, m: int, r: int,
+                          dtype=jnp.float32) -> Array:
+    """Blockwise-orthogonal Gaussian rows (Performer's ORF variance trick).
+
+    Draws ceil(m/r) independent (r, r) Gaussian blocks, QR-orthogonalizes
+    each, rescales rows to chi(r)-distributed norms so marginals match
+    N(0, I_r) exactly, and stacks the first m rows.
+    """
+    nblocks = -(-m // r)
+    keys = jax.random.split(key, nblocks + 1)
+    blocks = []
+    for i in range(nblocks):
+        g = jax.random.normal(keys[i], (r, r), dtype=jnp.float32)
+        q, _ = jnp.linalg.qr(g)
+        blocks.append(q)
+    w = jnp.concatenate(blocks, axis=0)[:m]
+    # Row norms ~ chi(r): norms of iid gaussian vectors in R^r.
+    norms = jnp.linalg.norm(
+        jax.random.normal(keys[-1], (m, r), dtype=jnp.float32), axis=-1,
+        keepdims=True)
+    return (w * norms).astype(dtype)
+
+
+def draw_projection(key: Array, cfg: FeatureConfig, d_head: int,
+                    dtype=jnp.float32) -> Array:
+    r = cfg.rank(d_head)
+    if cfg.orthogonal:
+        return orthogonal_projection(key, cfg.num_features, r, dtype)
+    return gaussian_projection(key, cfg.num_features, r, dtype)
+
+
+# ---------------------------------------------------------------------------
+# Feature maps
+# ---------------------------------------------------------------------------
+
+def _stabilizer(logits: Array, stabilize: bool) -> Array:
+    """max over (L, m) per leading batch dims; stop-grad; cancels in attn."""
+    if not stabilize:
+        return jnp.zeros(logits.shape[:-2] + (1, 1), logits.dtype)
+    c = jnp.max(logits, axis=(-2, -1), keepdims=True)
+    return jax.lax.stop_gradient(c)
+
+
+def prf_features(x: Array, w: Array, *, stabilize: bool = True,
+                 shared_stabilizer: Optional[Array] = None) -> Array:
+    """Isotropic positive random features (Performer, paper Eq. 1).
+
+    phi(x)_j = exp(w_j . x - ||x||^2/2 - c) / sqrt(m)
+    ``shared_stabilizer`` lets q and k share one c (required so that the
+    same constant multiplies numerator and denominator in attention).
+    """
+    m = w.shape[0]
+    logits = jnp.einsum("...ld,md->...lm", x, w)
+    sq = 0.5 * jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    raw = logits - sq
+    c = (shared_stabilizer if shared_stabilizer is not None
+         else _stabilizer(raw, stabilize))
+    return jnp.exp(raw - c) / jnp.sqrt(m), c
+
+
+def dark_features(x: Array, w: Array, m_mat: Array, *,
+                  stabilize: bool = True,
+                  shared_stabilizer: Optional[Array] = None) -> Array:
+    """DARKFormer data-aware PRFs (paper Eq. 3): phi_Sigma(x) = phi_iso(Mx).
+
+    x: (..., L, d), m_mat: (r, d), w: (m, r).
+    Unbiased for exp(q^T Sigma k) with Sigma = M^T M.
+    """
+    x_tilde = jnp.einsum("...ld,rd->...lr", x, m_mat)
+    return prf_features(x_tilde, w, stabilize=stabilize,
+                        shared_stabilizer=shared_stabilizer)
+
+
+def trig_features(x: Array, w: Array) -> Array:
+    """Trigonometric random features for the softmax kernel (§2).
+
+    h(x) = exp(+||x||^2/2); unbiased but can be negative -> unstable attn.
+    Provided for benchmarks only.
+    """
+    m = w.shape[0]
+    proj = jnp.einsum("...ld,md->...lm", x, w)
+    h = jnp.exp(0.5 * jnp.sum(jnp.square(x), axis=-1, keepdims=True))
+    feats = jnp.concatenate([jnp.cos(proj), jnp.sin(proj)], axis=-1)
+    return h * feats / jnp.sqrt(m)
+
+
+def qk_features(q: Array, k: Array, w: Array, kind: str,
+                m_mat: Optional[Array] = None, *,
+                stabilize: bool = True) -> tuple[Array, Array]:
+    """Map (q, k) jointly with a shared stabilizer. Returns (q', k').
+
+    q, k: (..., L, d) with the 1/sqrt(d) softmax scaling already absorbed
+    (q = Q / d^{1/4}, k = K / d^{1/4}).
+    """
+    if kind == "performer" or kind == "lfk":
+        # LFK differs only in W being a trained parameter, not a draw.
+        qraw = jnp.einsum("...ld,md->...lm", q, w) - 0.5 * jnp.sum(
+            jnp.square(q), axis=-1, keepdims=True)
+        kraw = jnp.einsum("...ld,md->...lm", k, w) - 0.5 * jnp.sum(
+            jnp.square(k), axis=-1, keepdims=True)
+    elif kind == "darkformer":
+        assert m_mat is not None, "darkformer needs the M matrix"
+        qt = jnp.einsum("...ld,rd->...lr", q, m_mat)
+        kt = jnp.einsum("...ld,rd->...lr", k, m_mat)
+        qraw = jnp.einsum("...lr,mr->...lm", qt, w) - 0.5 * jnp.sum(
+            jnp.square(qt), axis=-1, keepdims=True)
+        kraw = jnp.einsum("...lr,mr->...lm", kt, w) - 0.5 * jnp.sum(
+            jnp.square(kt), axis=-1, keepdims=True)
+    else:
+        raise ValueError(f"qk_features: unsupported kind {kind!r}")
+    if stabilize:
+        c = jax.lax.stop_gradient(
+            jnp.maximum(jnp.max(qraw, axis=(-2, -1), keepdims=True),
+                        jnp.max(kraw, axis=(-2, -1), keepdims=True)))
+    else:
+        c = jnp.zeros(qraw.shape[:-2] + (1, 1), qraw.dtype)
+    m = w.shape[0]
+    qf = jnp.exp(qraw - c) / jnp.sqrt(m)
+    kf = jnp.exp(kraw - c) / jnp.sqrt(m)
+    return qf, kf
+
+
+# ---------------------------------------------------------------------------
+# Parameter initialization for the learned pieces
+# ---------------------------------------------------------------------------
+
+def init_feature_params(key: Array, cfg: FeatureConfig, d_head: int,
+                        n_groups: int = 1, dtype=jnp.float32) -> dict:
+    """Initialize per-layer feature-kernel params.
+
+    Returns a dict pytree:
+      w      : (n_groups, m, r)  — projection (buffer for performer/dark,
+                                   trainable for lfk)
+      m_mat  : (n_groups, r, d)  — DARKFormer re-embedding (trainable),
+                                   identity-initialized (Sigma = I recovers
+                                   the plain softmax kernel at init).
+    n_groups lets GQA archs learn one Sigma per KV group.
+    """
+    r = cfg.rank(d_head)
+    kw, km = jax.random.split(key)
+    keys = jax.random.split(kw, n_groups)
+    w = jnp.stack([draw_projection(k, cfg, d_head, dtype) for k in keys])
+    params = {"w": w}
+    if cfg.kind == "darkformer":
+        eye = jnp.eye(r, d_head, dtype=dtype)
+        params["m_mat"] = jnp.broadcast_to(
+            eye, (n_groups, r, d_head)).copy()
+    return params
+
+
+def whitening_init(lam: Array, r: Optional[int] = None) -> Array:
+    """M = Lambda^{-1/2} from a calibration covariance (App. C / Prop C.1).
+
+    lam: (d, d) SPD covariance of q/k from a calibration batch. Returns
+    (r, d) with the top-r whitening directions (full rank if r is None).
+    """
+    evals, evecs = jnp.linalg.eigh(lam)
+    evals = jnp.maximum(evals, 1e-8)
+    # eigh returns ascending order; take the largest-variance directions.
+    inv_sqrt = evecs * jax.lax.rsqrt(evals)[None, :]
+    m_full = inv_sqrt.T[::-1]          # rows sorted by descending variance
+    if r is not None:
+        m_full = m_full[:r]
+    return m_full

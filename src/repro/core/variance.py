@@ -1,0 +1,169 @@
+"""Closed-form Monte-Carlo-variance math for PRF estimators.
+
+Implements the paper's theory layer so it can be validated numerically:
+
+  * ``optimal_sigma_star``      — Theorem 3.2: Sigma* = (I+2L)(I-2L)^{-1}
+  * ``b_gaussian``              — B_x(w) for x ~ N(0, L) in closed form
+                                  (Appendix A: prod_i c_i exp(beta_i w'_i^2))
+  * ``estimator_variance_iso``  — Var_w[kappa_hat] for w ~ N(0, I) (exact)
+  * ``estimator_variance_is``   — Var for the importance-sampled estimator
+                                  with Gaussian proposal N(0, S) (Lemma 3.1's
+                                  objective, exact Gaussian integrals)
+  * ``estimator_variance_dark`` — Var of DARKFormer's *unweighted* estimator
+                                  of its data-aligned kernel exp(q^T S k)
+  * ``expected_variance``       — E_{q,k~D}[Var] by closed-form inner
+                                  expectation + MC over (q, k)
+
+All terms are per-sample variances; the m-sample estimator divides by m.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def optimal_sigma_star(lam: Array) -> Array:
+    """Theorem 3.2: Sigma* = (I + 2*Lam)(I - 2*Lam)^{-1}.
+
+    Valid when lambda_max(Lam) < 1/2 (integrability of psi*). Computed in
+    the eigenbasis for symmetry/stability.
+    """
+    evals, evecs = jnp.linalg.eigh(lam)
+    star = (1.0 + 2.0 * evals) / (1.0 - 2.0 * evals)
+    return (evecs * star[None, :]) @ evecs.T
+
+
+def b_gaussian(omega: Array, lam: Array) -> Array:
+    """B_x(omega) = E_{x~N(0,Lam)}[exp(2 w.x - ||x||^2)], exact.
+
+    = |I + 2 Lam|^{-1/2} * exp( 2 w^T Lam (I + 2 Lam)^{-1} w ).
+    omega: (..., d).
+    """
+    d = lam.shape[-1]
+    eye = jnp.eye(d, dtype=lam.dtype)
+    a = eye + 2.0 * lam
+    sign, logdet = jnp.linalg.slogdet(a)
+    inner = jnp.einsum("...d,de,...e->...", omega,
+                       lam @ jnp.linalg.inv(a), omega)
+    return jnp.exp(2.0 * inner - 0.5 * logdet)
+
+
+def kappa_softmax(q: Array, k: Array) -> Array:
+    return jnp.exp(jnp.sum(q * k, axis=-1))
+
+
+def estimator_variance_iso(q: Array, k: Array) -> Array:
+    """Exact per-sample Var_w[Z], w ~ N(0, I), Z the PRF summand (Lemma 2.1).
+
+    E[Z^2] = exp(2||q+k||^2 - ||q||^2 - ||k||^2);  Var = E[Z^2] - exp(2 q.k).
+    """
+    s = q + k
+    ez2 = jnp.exp(2.0 * jnp.sum(s * s, axis=-1)
+                  - jnp.sum(q * q, axis=-1) - jnp.sum(k * k, axis=-1))
+    return ez2 - kappa_softmax(q, k) ** 2
+
+
+def estimator_variance_is(q: Array, k: Array, sigma_psi: Array) -> Array:
+    """Exact per-sample Var of the IS estimator (Eq. 2) with psi = N(0, S).
+
+    Z = (p_I/psi)(w) exp(w.s - a),  a = (||q||^2+||k||^2)/2,  w ~ psi.
+    E[Z^2] = 2^{-d/2} |S|^{1/2} |A|^{-1/2} exp(s^T A^{-1} s - 2a),
+    with A = I - S^{-1}/2, requires A > 0 (finite variance).
+    """
+    d = sigma_psi.shape[-1]
+    eye = jnp.eye(d, dtype=sigma_psi.dtype)
+    s_inv = jnp.linalg.inv(sigma_psi)
+    a_mat = eye - 0.5 * s_inv
+    s = q + k
+    _, logdet_s = jnp.linalg.slogdet(sigma_psi)
+    _, logdet_a = jnp.linalg.slogdet(a_mat)
+    quad = jnp.einsum("...d,de,...e->...", s, jnp.linalg.inv(a_mat), s)
+    two_a = jnp.sum(q * q, axis=-1) + jnp.sum(k * k, axis=-1)
+    log_ez2 = (-0.5 * d * jnp.log(2.0) + 0.5 * logdet_s - 0.5 * logdet_a
+               + quad - two_a)
+    return jnp.exp(log_ez2) - kappa_softmax(q, k) ** 2
+
+
+def estimator_variance_dark(q: Array, k: Array, sigma: Array) -> Array:
+    """Var of DARKFormer's unweighted estimator of exp(q^T Sigma k) (Eq. 3).
+
+    Z = exp(w.s - (q^T S q + k^T S k)/2), w ~ N(0, S).
+    E[Z^2] = exp(2 s^T S s - q^T S q - k^T S k).
+    """
+    s = q + k
+    def quad(x):
+        return jnp.einsum("...d,de,...e->...", x, sigma, x)
+    ez2 = jnp.exp(2.0 * quad(s) - quad(q) - quad(k))
+    ez = jnp.exp(jnp.einsum("...d,de,...e->...", q, sigma, k))
+    return ez2 - ez ** 2
+
+
+def expected_variance(keys: Array, lam: Array, sigma_psi: Array | None,
+                      n_pairs: int = 4096) -> Array:
+    """E_{q,k~N(0,Lam)}[Var_w[kappa_hat]] — closed-form inner, MC outer.
+
+    sigma_psi None -> isotropic baseline; else the IS proposal N(0, S).
+    """
+    d = lam.shape[-1]
+    chol = jnp.linalg.cholesky(lam)
+    kq, kk = jax.random.split(keys)
+    q = jax.random.normal(kq, (n_pairs, d)) @ chol.T
+    k = jax.random.normal(kk, (n_pairs, d)) @ chol.T
+    if sigma_psi is None:
+        v = estimator_variance_iso(q, k)
+    else:
+        v = estimator_variance_is(q, k, sigma_psi)
+    return jnp.mean(v)
+
+
+def importance_weight(omega: Array, sigma: Array) -> Array:
+    """w_Sigma(omega) = p_Sigma(omega) / p_I(omega)  (Proposition 4.1)."""
+    d = sigma.shape[-1]
+    _, logdet = jnp.linalg.slogdet(sigma)
+    s_inv = jnp.linalg.inv(sigma)
+    quad_s = jnp.einsum("...d,de,...e->...", omega, s_inv, omega)
+    quad_i = jnp.sum(omega * omega, axis=-1)
+    return jnp.exp(-0.5 * logdet - 0.5 * quad_s + 0.5 * quad_i)
+
+
+def mc_kernel_estimate(q: Array, k: Array, omegas: Array,
+                       weights: Array | None = None) -> Array:
+    """m-sample PRF estimate of exp(q.k) (optionally importance-weighted).
+
+    q, k: (..., d); omegas: (m, d); weights: (m,) or None.
+    """
+    zq = jnp.exp(jnp.einsum("md,...d->...m", omegas, q)
+                 - 0.5 * jnp.sum(q * q, axis=-1, keepdims=True))
+    zk = jnp.exp(jnp.einsum("md,...d->...m", omegas, k)
+                 - 0.5 * jnp.sum(k * k, axis=-1, keepdims=True))
+    z = zq * zk
+    if weights is not None:
+        z = z * weights
+    return jnp.mean(z, axis=-1)
+
+
+def mc_dark_estimate(q: Array, k: Array, omegas: Array, sigma: Array) -> Array:
+    """m-sample unweighted DARKFormer estimate of exp(q^T Sigma k).
+
+    omegas must be drawn from N(0, Sigma).
+    """
+    def quad(x):
+        return jnp.einsum("...d,de,...e->...", x, sigma, x)
+    zq = jnp.exp(jnp.einsum("md,...d->...m", omegas, q)
+                 - 0.5 * quad(q)[..., None])
+    zk = jnp.exp(jnp.einsum("md,...d->...m", omegas, k)
+                 - 0.5 * quad(k)[..., None])
+    return jnp.mean(zq * zk, axis=-1)
+
+
+def empirical_qk_covariance(q: Array, k: Array) -> Array:
+    """Pooled covariance of flattened q/k vectors — calibration input.
+
+    q, k: (..., d). Used to whiten (M = Lam^{-1/2}) or to form Sigma*.
+    """
+    x = jnp.concatenate([q.reshape(-1, q.shape[-1]),
+                         k.reshape(-1, k.shape[-1])], axis=0)
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    return (x.T @ x) / x.shape[0]

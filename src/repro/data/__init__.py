@@ -1,0 +1,3 @@
+"""Deterministic, shardable, resumable data pipelines (no external deps)."""
+from repro.data.synthetic import SyntheticLM, SyntheticAudio, SyntheticVLM
+from repro.data.c4_mock import C4Mock

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the PRF-attention hot spots (+ jnp oracles).
+
+Kernels (each: <name>.py pallas_call + BlockSpec, oracle in ref.py, jit'd
+differentiable wrapper in ops.py):
+
+  * linear_attn_scan — chunked causal linear attention (the O(Lmd) scan
+    that replaces the softmax O(L^2 d) matmuls; paper Fig. 1)
+  * prf_featmap      — fused phi(x) = exp(W Mx - ||Mx||^2/2 - c)/sqrt(m)
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import linear_attention_causal, prf_featmap

@@ -1,0 +1,183 @@
+"""Jit'd public wrappers for the Pallas kernels, with autodiff.
+
+Forward = Pallas kernel; backward = VJP of the pure-jnp oracle (exact same
+math, so gradients are correct and the kernel stays forward-only). On this
+CPU container the kernels run with interpret=True; on TPU they compile.
+``repro.kernels.USE_INTERPRET`` is resolved once from the backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.linear_attn_scan import linear_attention_causal_fwd
+from repro.kernels.prf_featmap import prf_featmap_fwd
+
+Array = jax.Array
+
+
+def _use_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# Chunked causal linear attention
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _lin_attn(qf: Array, kf: Array, v: Array, chunk: int, eps: float):
+    n = qf.shape[:-2]
+    l, m = qf.shape[-2:]
+    dv = v.shape[-1]
+    qf2 = qf.reshape(-1, l, m)
+    kf2 = kf.reshape(-1, l, m)
+    v2 = v.reshape(-1, l, dv)
+    out = linear_attention_causal_fwd(qf2, kf2, v2, chunk=chunk, eps=eps,
+                                      interpret=_use_interpret())
+    return out.reshape(*n, l, dv)
+
+
+def _lin_attn_fwd(qf, kf, v, chunk, eps):
+    return _lin_attn(qf, kf, v, chunk, eps), (qf, kf, v)
+
+
+def _lin_attn_bwd(chunk, eps, res, g):
+    qf, kf, v = res
+    n = qf.shape[:-2]
+    l, m = qf.shape[-2:]
+    dv = v.shape[-1]
+
+    def f(qf_, kf_, v_):
+        return _ref.linear_attention_causal_ref(
+            qf_.reshape(-1, l, m), kf_.reshape(-1, l, m),
+            v_.reshape(-1, l, dv), eps=eps).reshape(*n, l, dv)
+
+    _, vjp = jax.vjp(f, qf, kf, v)
+    return vjp(g)
+
+
+_lin_attn.defvjp(_lin_attn_fwd, _lin_attn_bwd)
+
+
+def linear_attention_causal(qf: Array, kf: Array, v: Array, *,
+                            chunk: int = 256, eps: float = 1e-6) -> Array:
+    """Causal PRF attention via the Pallas scan kernel. (..., L, m) x
+    (..., L, dv) -> (..., L, dv); differentiable (oracle-VJP backward)."""
+    return _lin_attn(qf, kf, v, chunk, eps)
+
+
+# ---------------------------------------------------------------------------
+# Fused PRF feature map
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _featmap(x, m_mat, w, c, block_n):
+    shape = x.shape
+    out = prf_featmap_fwd(x.reshape(-1, shape[-1]), m_mat, w, c,
+                          block_n=block_n, interpret=_use_interpret())
+    return out.reshape(*shape[:-1], w.shape[0])
+
+
+def _featmap_fwd(x, m_mat, w, c, block_n):
+    return _featmap(x, m_mat, w, c, block_n), (x, m_mat, w, c)
+
+
+def _featmap_bwd(block_n, res, g):
+    x, m_mat, w, c = res
+    shape = x.shape
+
+    def f(x_, m_, w_, c_):
+        return _ref.prf_featmap_ref(x_.reshape(-1, shape[-1]), m_, w_,
+                                    c_).reshape(*shape[:-1], w_.shape[0])
+
+    _, vjp = jax.vjp(f, x, m_mat, w, c)
+    return vjp(g)
+
+
+_featmap.defvjp(_featmap_fwd, _featmap_bwd)
+
+
+def prf_featmap(x: Array, m_mat: Array | None, w: Array,
+                c: Array | float = 0.0, *, block_n: int = 256) -> Array:
+    """Fused phi(x) = exp(W Mx - ||Mx||^2/2 - c)/sqrt(m). Differentiable."""
+    c = jnp.asarray(c, jnp.float32)
+    if m_mat is None:
+        # custom_vjp can't take None leaves; isotropic uses identity fold.
+        return _featmap_iso(x, w, c, block_n)
+    return _featmap(x, m_mat, w, c, block_n)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _featmap_iso(x, w, c, block_n):
+    shape = x.shape
+    out = prf_featmap_fwd(x.reshape(-1, shape[-1]), None, w, c,
+                          block_n=block_n, interpret=_use_interpret())
+    return out.reshape(*shape[:-1], w.shape[0])
+
+
+def _featmap_iso_fwd(x, w, c, block_n):
+    return _featmap_iso(x, w, c, block_n), (x, w, c)
+
+
+def _featmap_iso_bwd(block_n, res, g):
+    x, w, c = res
+    shape = x.shape
+
+    def f(x_, w_, c_):
+        return _ref.prf_featmap_ref(x_.reshape(-1, shape[-1]), None, w_,
+                                    c_).reshape(*shape[:-1], w_.shape[0])
+
+    _, vjp = jax.vjp(f, x, w, c)
+    return vjp(g)
+
+
+_featmap_iso.defvjp(_featmap_iso_fwd, _featmap_iso_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Chunked WKV-6 recurrence
+# ---------------------------------------------------------------------------
+
+from repro.kernels.wkv6_scan import wkv6_fwd as _wkv6_fwd  # noqa: E402
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _wkv6(r, k, v, w, u, chunk):
+    n = r.shape[:-2]
+    l, dh = r.shape[-2:]
+    out = _wkv6_fwd(r.reshape(-1, l, dh), k.reshape(-1, l, dh),
+                    v.reshape(-1, l, dh), w.reshape(-1, l, dh), u,
+                    chunk=chunk, interpret=_use_interpret())
+    return out.reshape(*n, l, dh)
+
+
+def _wkv6_vjp_fwd(r, k, v, w, u, chunk):
+    return _wkv6(r, k, v, w, u, chunk), (r, k, v, w, u)
+
+
+def _wkv6_vjp_bwd(chunk, res, g):
+    r, k, v, w, u = res
+    n = r.shape[:-2]
+    l, dh = r.shape[-2:]
+
+    def f(r_, k_, v_, w_, u_):
+        s0 = jnp.zeros((r_.reshape(-1, l, dh).shape[0], dh, dh),
+                       jnp.float32)
+        o, _ = _ref.wkv6_ref(r_.reshape(-1, l, dh), k_.reshape(-1, l, dh),
+                             v_.reshape(-1, l, dh), w_.reshape(-1, l, dh),
+                             u_, s0)
+        return o.reshape(*n, l, dh)
+
+    _, vjp = jax.vjp(f, r, k, v, w, u)
+    return vjp(g)
+
+
+_wkv6.defvjp(_wkv6_vjp_fwd, _wkv6_vjp_bwd)
+
+
+def wkv6(r, k, v, w, u, *, chunk: int = 256):
+    """Chunked RWKV-6 WKV via the Pallas kernel; oracle-VJP backward."""
+    return _wkv6(r, k, v, w, u, chunk)

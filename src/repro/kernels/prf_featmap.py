@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: fused DARKFormer PRF feature map.
+
+Computes, without materializing the re-embedding x~ = M x in HBM:
+
+    phi(x) = exp( W (M x) - ||M x||^2 / 2 - c ) / sqrt(m)
+
+i.e. two chained matmuls + row-norm + exp fused in VMEM. For the isotropic
+(Performer/LFK) map, M is identity and the wrapper passes m_mat=None to a
+single-matmul variant.
+
+Grid: rows of x tiled by ``block_n``; W and M stay resident in VMEM
+(m x r and r x d — e.g. 256x128 + 128x128 f32 = 192 KB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel_dark(x_ref, m_ref, w_ref, c_ref, o_ref, *, m_feats: int):
+    x = x_ref[...].astype(jnp.float32)           # (Tn, d)
+    m_mat = m_ref[...].astype(jnp.float32)       # (r, d)
+    w = w_ref[...].astype(jnp.float32)           # (m, r)
+    c = c_ref[0, 0]
+    xt = jax.lax.dot_general(x, m_mat, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Tn, r)
+    logits = jax.lax.dot_general(xt, w, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    sq = 0.5 * jnp.sum(xt * xt, axis=1, keepdims=True)
+    o_ref[...] = (jnp.exp(logits - sq - c)
+                  * (m_feats ** -0.5)).astype(o_ref.dtype)
+
+
+def _kernel_iso(x_ref, w_ref, c_ref, o_ref, *, m_feats: int):
+    x = x_ref[...].astype(jnp.float32)           # (Tn, d)
+    w = w_ref[...].astype(jnp.float32)           # (m, d)
+    c = c_ref[0, 0]
+    logits = jax.lax.dot_general(x, w, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    sq = 0.5 * jnp.sum(x * x, axis=1, keepdims=True)
+    o_ref[...] = (jnp.exp(logits - sq - c)
+                  * (m_feats ** -0.5)).astype(o_ref.dtype)
+
+
+def prf_featmap_fwd(x: Array, m_mat: Array | None, w: Array, c: Array, *,
+                    block_n: int = 256, interpret: bool = False) -> Array:
+    """x: (N, d); m_mat: (r, d) | None; w: (m, r); c: scalar. -> (N, m) f32."""
+    n, d = x.shape
+    m_feats = w.shape[0]
+    t = min(block_n, n)
+    pad = (-n) % t
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+    npad = n + pad
+    grid = (npad // t,)
+    c_arr = jnp.asarray(c, jnp.float32).reshape(1, 1)
+    if m_mat is not None:
+        r = m_mat.shape[0]
+        out = pl.pallas_call(
+            functools.partial(_kernel_dark, m_feats=m_feats),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((t, d), lambda i: (i, 0)),
+                pl.BlockSpec((r, d), lambda i: (0, 0)),
+                pl.BlockSpec((m_feats, r), lambda i: (0, 0)),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+            ],
+            out_specs=pl.BlockSpec((t, m_feats), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((npad, m_feats), jnp.float32),
+            interpret=interpret,
+        )(x, m_mat, w, c_arr)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_kernel_iso, m_feats=m_feats),
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((t, d), lambda i: (i, 0)),
+                pl.BlockSpec((m_feats, w.shape[1]), lambda i: (0, 0)),
+                pl.BlockSpec(memory_space=pltpu.SMEM),
+            ],
+            out_specs=pl.BlockSpec((t, m_feats), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((npad, m_feats), jnp.float32),
+            interpret=interpret,
+        )(x, w, c_arr)
+    return out[:n]

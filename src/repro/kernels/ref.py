@@ -1,0 +1,83 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are tested against (interpret=True
+on CPU; compiled on TPU) and the fallback used in autodiff backward passes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def linear_attention_causal_ref(qf: Array, kf: Array, v: Array,
+                                eps: float = 1e-6) -> Array:
+    """Causal linear attention, O(L^2) masked form. qf,kf: (N, L, m);
+    v: (N, L, dv). N = flattened batch*heads."""
+    scores = jnp.einsum("nqm,nkm->nqk", qf.astype(jnp.float32),
+                        kf.astype(jnp.float32))
+    l = qf.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    scores = jnp.where(mask[None], scores, 0.0)
+    num = jnp.einsum("nqk,nkd->nqd", scores, v.astype(jnp.float32))
+    den = jnp.sum(scores, axis=-1, keepdims=True)
+    return (num / (den + eps)).astype(v.dtype)
+
+
+def prf_featmap_ref(x: Array, m_mat: Array | None, w: Array,
+                    c: Array) -> Array:
+    """DARKFormer/Performer feature map. x: (N, d); m_mat: (r, d) or None
+    (isotropic); w: (m, r); c: scalar stabilizer. Returns (N, m) f32."""
+    x = x.astype(jnp.float32)
+    if m_mat is not None:
+        x = x @ m_mat.astype(jnp.float32).T
+    logits = x @ w.astype(jnp.float32).T
+    sq = 0.5 * jnp.sum(jnp.square(x), axis=-1, keepdims=True)
+    m = w.shape[0]
+    return jnp.exp(logits - sq - c) * (m ** -0.5)
+
+
+def rglru_ref(x: Array, a: Array, gate: Array, h0: Array) -> tuple[Array,
+                                                                   Array]:
+    """RG-LRU diagonal recurrence oracle (Griffin, arXiv:2402.19427).
+
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (g_t * x_t)
+    x, a, gate: (N, L, d) with a in (0, 1); h0: (N, d).
+    Returns (h_all (N, L, d), h_last (N, d)).
+    """
+    x = x.astype(jnp.float32)
+    a = a.astype(jnp.float32)
+    inp = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0)) * (
+        gate.astype(jnp.float32) * x)
+
+    def step(h, xs):
+        a_t, i_t = xs
+        h = a_t * h + i_t
+        return h, h
+
+    hl, hs = jax.lax.scan(step, h0.astype(jnp.float32),
+                          (jnp.moveaxis(a, 1, 0), jnp.moveaxis(inp, 1, 0)))
+    return jnp.moveaxis(hs, 0, 1), hl
+
+
+def wkv6_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
+             s0: Array) -> tuple[Array, Array]:
+    """RWKV-6 WKV recurrence oracle (arXiv:2404.05892).
+
+    Per head: S_t = diag(w_t) S_{t-1} + k_t v_t^T
+              o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+    r,k,v,w: (N, L, dh); u: (dh,); s0: (N, dh, dh). w_t in (0,1) decay.
+    Returns (o (N, L, dh), s_last).
+    """
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs
+        kv = k_t[:, :, None] * v_t[:, None, :]
+        o = jnp.einsum("nd,nde->ne", r_t, s + u[None, :, None] * kv)
+        s = w_t[:, :, None] * s + kv
+        return s, o
+
+    args = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+                 for t in (r, k, v, w))
+    s_last, outs = jax.lax.scan(step, s0.astype(jnp.float32), args)
+    return jnp.moveaxis(outs, 0, 1), s_last

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: chunked RWKV-6 WKV recurrence.
+
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+
+Grid: (batch*heads) parallel x sequence-chunks sequential; the (dh x dh)
+state S is carried in VMEM scratch across chunks. Within a chunk the
+recurrence is stepped with an in-register fori_loop — per step the work is
+three (dh x dh) VPU element-wise ops + one (1 x dh)(dh x dh) matvec, all
+resident in VMEM (dh = 64 for every RWKV-6 size). The data-dependent decay
+w_t (the "Finch" feature) rules out the pure-matmul chunk form without
+log-space renormalization; the in-VMEM stepped form sidesteps that
+stability issue (see ref.wkv6_ref for the oracle).
+
+VMEM per grid step (f32): 4*T*dh (r,k,v,w) + dh^2 (S) + T*dh (o)
+  = T=256, dh=64: ~350 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, t: int):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+
+    r = r_ref[0].astype(jnp.float32)     # (T, dh)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[...].astype(jnp.float32)   # (1, dh)
+
+    def step(i, carry):
+        s, o_acc = carry
+        kv = k[i][:, None] * v[i][None, :]              # (dh, dh)
+        o_i = (r[i][None, :] @ (s + u.T * kv))[0]       # (dh,)
+        s = w[i][:, None] * s + kv
+        o_acc = jax.lax.dynamic_update_index_in_dim(o_acc, o_i, i, 0)
+        return s, o_acc
+
+    s0 = s_ref[...]
+    o0 = jnp.zeros((t, v.shape[1]), jnp.float32)
+    s_fin, o = jax.lax.fori_loop(0, t, step, (s0, o0))
+    s_ref[...] = s_fin
+    o_ref[0] = o.astype(o_ref.dtype)
+
+
+def wkv6_fwd(r: Array, k: Array, v: Array, w: Array, u: Array, *,
+             chunk: int = 256, interpret: bool = False) -> Array:
+    """r,k,v,w: (N, L, dh); u: (dh,) -> o: (N, L, dh).
+
+    N = batch*heads flattened; L padded to a chunk multiple (w=1, k=0 in
+    the pad keeps the state frozen, so padding is exact).
+    """
+    n, l, dh = r.shape
+    t = min(chunk, l)
+    pad = (-l) % t
+    if pad:
+        r = jnp.pad(r, ((0, 0), (0, pad), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0)))
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0)),
+                    constant_values=1.0)
+    lp = l + pad
+    grid = (n, lp // t)
+    out = pl.pallas_call(
+        functools.partial(_kernel, t=t),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, t, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, t, dh), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, dh), lambda b, c: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, t, dh), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, lp, dh), v.dtype),
+        scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(r, k, v, w, u.reshape(1, dh))
+    return out[:, :l]

@@ -1,0 +1,41 @@
+"""Mesh builders. Functions, not module constants — importing this module
+never touches jax device state (required for the dry-run's
+xla_force_host_platform_device_count to win the init race)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """The deployment mesh: one v5e pod 16x16 (data, model), or two pods
+    2x16x16 (pod, data, model). 'pod' is the DCN axis.
+
+    When more placeholder devices exist than the mesh needs (the dry-run
+    allocates 512 host devices for both meshes), the first prod(shape) are
+    used."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devs) > n:
+        import numpy as np
+        return jax.sharding.Mesh(
+            np.asarray(devs[:n]).reshape(shape), axes)
+    raise ValueError(
+        f"need {n} devices for mesh {dict(zip(axes, shape))}, have "
+        f"{len(devs)} — run under dryrun.py (it sets "
+        f"xla_force_host_platform_device_count)")
+
+
+def make_local_mesh(data: int = 1, model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU runs)."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_mesh_for_shape(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """Arbitrary topology (elastic-restart path uses this after a shrink)."""
+    return jax.make_mesh(shape, axes)

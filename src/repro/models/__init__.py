@@ -1,0 +1,5 @@
+"""Model substrate: layers, mixers, and the composable LM stack."""
+from repro.models.lm import (ModelConfig, init_params, forward_train,
+                             loss_fn, prefill, decode_step,
+                             init_serve_state)
+from repro.models.layers import MoEConfig

@@ -1,0 +1,197 @@
+"""Model substrate: norms, RoPE, MLPs, MoE — pure-JAX (no flax).
+
+Every layer is an (init, apply) pair over explicit param pytrees. Weight
+layouts are chosen so the sharding rules in repro/parallel/sharding.py can
+match on dict key names (see LOGICAL_AXES there).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def trunc_normal(key, shape, scale, dtype=jnp.float32):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (scale / fan_in) ** 0.5
+    return std * jax.random.truncated_normal(key, -2.0, 2.0, shape,
+                                             jnp.float32).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}      # gemma-style (1 + scale)
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)
+            + params["bias"].astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(kind: str, params: dict, x: Array) -> Array:
+    return rmsnorm(params, x) if kind == "rmsnorm" else layernorm(params, x)
+
+
+def norm_init(kind: str, d: int, dtype=jnp.float32) -> dict:
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" else layernorm_init(
+        d, dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> Array:
+    return theta ** (-jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """x: (..., L, d_head); positions: (L,) or broadcastable int32."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (d/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (L, d/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d_model: int, d_ff: int, kind: str,
+             dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p = {"w_out": trunc_normal(k3, (d_ff, d_model), 1.0, dtype)}
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = trunc_normal(k1, (d_model, d_ff), 1.0, dtype)
+        p["w_up"] = trunc_normal(k2, (d_model, d_ff), 1.0, dtype)
+    else:
+        p["w_up"] = trunc_normal(k2, (d_model, d_ff), 1.0, dtype)
+    return p
+
+
+def mlp_apply(params: dict, x: Array, kind: str) -> Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ params["w_gate"]) * (x @ params["w_up"])
+    else:
+        h = jax.nn.gelu(x @ params["w_up"])
+    return h @ params["w_out"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts (top-k, capacity-based einsum dispatch — GShard style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff: int                    # per-expert hidden
+    capacity_factor: float = 1.25
+    aux_loss_weight: float = 0.01
+    # Optional (dp_axes, expert_axis) to pin the dispatch buffers: the
+    # (B,E,C,d) scatter/gather buffers get batch on dp_axes and the expert
+    # dim on expert_axis ("model" under EP, None under TP-expert
+    # fallback). Prevents XLA SPMD from re-sharding them across 'model'
+    # (shows up as huge all-reduces in the collective roofline term).
+    # Requires an ambient mesh (jax.set_mesh) at trace time.
+    dispatch_spec: Optional[tuple] = None
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype=jnp.float32) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    e, f = cfg.num_experts, cfg.d_ff
+    return {
+        "router": trunc_normal(k1, (d_model, e), 1.0, jnp.float32),
+        "w_gate": trunc_normal(k2, (e, d_model, f), 1.0, dtype),
+        "w_up": trunc_normal(k3, (e, d_model, f), 1.0, dtype),
+        "w_out": trunc_normal(k4, (e, f, d_model), 1.0, dtype),
+    }
+
+
+def moe_apply(params: dict, x: Array, cfg: MoEConfig
+              ) -> tuple[Array, Array]:
+    """x: (B, L, d) -> (out, aux_loss). Capacity-dropped top-k routing.
+
+    Dispatch/combine are one-hot einsums over a (B, E, C) capacity buffer so
+    XLA SPMD can turn the expert axis into all-to-all under EP sharding.
+    """
+    b, l, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * k * l / e))
+    logits = (x.astype(jnp.float32) @ params["router"])       # (B, L, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                  # (B, L, K)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, -1, keepdims=True) + 1e-9)
+
+    # Load-balancing aux loss (Switch): E * sum_e f_e * p_e.
+    me = jnp.mean(probs, axis=(0, 1))                         # (E,)
+    onehot_top1 = jax.nn.one_hot(idx[..., 0], e)
+    ce = jnp.mean(onehot_top1, axis=(0, 1))
+    aux = cfg.aux_loss_weight * e * jnp.sum(me * ce)
+
+    # Position of each (token, k) within its expert's capacity buffer
+    # (GShard semantics: capacity group = batch row). Dispatch/combine are
+    # scatter/gather (O(B L K d)) rather than one-hot einsums (O(B L E C d))
+    # so neither compute nor memory scales with E*C; under EP sharding the
+    # scatter across the expert axis lowers to the MoE all-to-all.
+    sel = jax.nn.one_hot(idx, e, dtype=jnp.int32)             # (B, L, K, E)
+    flat = sel.reshape(b, l * k, e)
+    pos_e = jnp.cumsum(flat, axis=1) - 1                      # (B, L*K, E)
+    pos = jnp.take_along_axis(
+        pos_e.reshape(b, l, k, e), idx[..., None], axis=-1)[..., 0]
+    in_cap = pos < cap                                        # (B, L, K)
+    pos_c = jnp.clip(pos, 0, cap - 1)
+    b_idx = jnp.arange(b)[:, None, None]
+    upd = (x[:, :, None, :] * in_cap[..., None].astype(x.dtype))
+    xin = jnp.zeros((b, e, cap, d), x.dtype).at[
+        b_idx, idx, pos_c].add(upd)                           # (B, E, C, d)
+
+    def _pin(t, expert_axis):
+        if cfg.dispatch_spec is None:
+            return t
+        from jax.sharding import PartitionSpec as P
+        dp, eax = cfg.dispatch_spec
+        axes = [tuple(dp)] + [None] * (t.ndim - 1)
+        if expert_axis:
+            axes[1] = eax
+        return jax.lax.with_sharding_constraint(t, P(*axes))
+
+    xin = _pin(xin, True)
+    h = jnp.einsum("becd,edf->becf", xin, params["w_gate"])
+    hu = jnp.einsum("becd,edf->becf", xin, params["w_up"])
+    h = jax.nn.silu(h) * hu
+    xout = _pin(jnp.einsum("becf,efd->becd", h, params["w_out"]), True)
+    gathered = _pin(xout[b_idx, idx, pos_c], False)           # (B, L, K, d)
+    gates = (gate_vals * in_cap.astype(jnp.float32)).astype(x.dtype)
+    out = jnp.einsum("blkd,blk->bld", gathered, gates)
+    return out, aux

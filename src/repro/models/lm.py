@@ -1,0 +1,513 @@
+"""The composable LM stack: config, init, train/prefill/decode entrypoints.
+
+Supports heterogeneous block patterns (dense attention, sliding-window
+attention, RG-LRU, RWKV-6), GQA, MoE FFNs, qk-norm, RoPE, tied heads,
+text/audio/VLM modalities — enough to express all 10 assigned architectures
+plus the paper's Gemma-style model, with the paper's RF attention selectable
+per config (FeatureConfig.kind).
+
+Layer stacking: the block pattern repeats over the depth; full repetitions
+are stacked and executed with jax.lax.scan (keeps HLO size and compile time
+independent of depth — essential for the 512-device dry-run), any remainder
+layers run unscanned. Each scanned unit is wrapped in jax.checkpoint with a
+configurable remat policy.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import feature_maps as fm
+from repro.models import layers as ll
+from repro.models import attention_block as ab
+from repro.models import recurrent as rec
+
+Array = jax.Array
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": "nothing_saveable",
+    "dots": "dots_with_no_batch_dims_saveable",
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 0                       # 0 -> d_model // n_heads
+    block_pattern: tuple = ("attn",)      # cycled: attn|local|rec|rwkv
+    attn: fm.FeatureConfig = fm.FeatureConfig(kind="darkformer")
+    window: Optional[int] = None          # for "local" blocks
+    rope_theta: float = 10000.0           # <=0 disables RoPE
+    qk_norm: bool = False
+    mlp_kind: str = "swiglu"              # swiglu|geglu|gelu
+    moe: Optional[ll.MoEConfig] = None
+    tie_embeddings: bool = True
+    causal: bool = True
+    modality: str = "text"                # text|audio|vlm
+    norm_kind: str = "rmsnorm"
+    d_rnn: int = 0                        # rec blocks; 0 -> d_model
+    embed_scale: bool = False             # gemma-style sqrt(d) embed scale
+    logit_softcap: float = 0.0
+    num_patches: int = 256                # vlm prefix length
+    dtype: str = "float32"                # param/activation dtype
+    remat: str = "dots"                   # key of REMAT_POLICIES
+    scan_layers: bool = True
+    use_kernel: bool = False              # pallas linear-attention path
+    z_loss: float = 1e-4
+    # Per-arch sharding-rule overrides: ((path-regex, partition-spec-tuple),
+    # ...) applied before the global rules in repro.parallel.sharding.
+    # Sharding is geometry-dependent; archs whose dims interact badly with
+    # the global rules pin their empirically-best layout here (see
+    # EXPERIMENTS.md §Perf, granite-moe iterations).
+    sharding_overrides: tuple = ()
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def rnn_width(self) -> int:
+        return self.d_rnn or self.d_model
+
+    @property
+    def param_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def layer_kinds(self) -> list[str]:
+        p = self.block_pattern
+        return [p[i % len(p)] for i in range(self.n_layers)]
+
+    @property
+    def n_units(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def n_rem(self) -> int:
+        return self.n_layers % len(self.block_pattern)
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str) -> dict:
+    dt = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: dict[str, Any] = {"ln1": ll.norm_init(cfg.norm_kind, cfg.d_model, dt),
+                         "ln2": ll.norm_init(cfg.norm_kind, cfg.d_model, dt)}
+    if kind in ("attn", "local"):
+        p["attn"] = ab.attn_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv,
+                                 cfg.head_dim, cfg.attn, cfg.qk_norm, dt)
+        p["ffn"] = (ll.moe_init(k2, cfg.d_model, cfg.moe, dt)
+                    if cfg.moe else
+                    ll.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dt))
+    elif kind == "rec":
+        p["rec"] = rec.rglru_init(k1, cfg.d_model, cfg.rnn_width, dt)
+        p["ffn"] = (ll.moe_init(k2, cfg.d_model, cfg.moe, dt)
+                    if cfg.moe else
+                    ll.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind, dt))
+    elif kind == "rwkv":
+        p["tmix"] = rec.rwkv6_init(k1, cfg.d_model, cfg.n_heads, dtype=dt)
+        p["cmix"] = rec.rwkv6_channel_mix_init(k2, cfg.d_model, cfg.d_ff, dt)
+    else:
+        raise ValueError(f"unknown block kind {kind!r}")
+    return p
+
+
+def _unit_init(key, cfg: ModelConfig) -> dict:
+    keys = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}": _block_init(keys[i], cfg, kind)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def init_params(key, cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    ke, ku, kr, kh, kp = jax.random.split(key, 5)
+    params: dict[str, Any] = {
+        "embed": ll.trunc_normal(ke, (cfg.vocab, cfg.d_model), 1.0, dt),
+        "final_norm": ll.norm_init(cfg.norm_kind, cfg.d_model, dt),
+    }
+    if cfg.n_units > 0:
+        unit_keys = jax.random.split(ku, cfg.n_units)
+        params["units"] = jax.vmap(
+            lambda k: _unit_init(k, cfg))(unit_keys)
+    if cfg.n_rem:
+        rem_keys = jax.random.split(kr, cfg.n_rem)
+        params["rem"] = [
+            _block_init(rem_keys[i], cfg,
+                        cfg.block_pattern[i % len(cfg.block_pattern)])
+            for i in range(cfg.n_rem)]
+    if not cfg.tie_embeddings:
+        params["lm_head"] = ll.trunc_normal(kh, (cfg.d_model, cfg.vocab),
+                                            1.0, dt)
+    if cfg.modality == "audio":
+        params["mask_embed"] = ll.trunc_normal(kp, (cfg.d_model,), 1.0, dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Block application (train / prefill: full-sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
+                 layer_key: Optional[Array], state=None, mode="train",
+                 position=None):
+    """Returns (x, aux_loss, new_state)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = ll.apply_norm(cfg.norm_kind, params["ln1"], x)
+    new_state = state
+    common = dict(n_heads=cfg.n_heads, n_kv=cfg.n_kv, d_head=cfg.head_dim,
+                  qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta)
+    window = cfg.window if kind == "local" else None
+    if kind in ("attn", "local"):
+        if mode == "train":
+            mix = ab.attn_apply(params["attn"], h, cfg.attn, causal=cfg.causal,
+                                window=window, use_kernel=cfg.use_kernel,
+                                baseline_key=layer_key, **common)
+        elif mode == "prefill":
+            mix, new_state = ab.attn_prefill(
+                params["attn"], h, cfg.attn, window=window,
+                max_len=state, use_kernel=cfg.use_kernel, **common)
+        else:  # decode
+            mix, new_state = ab.attn_decode(
+                params["attn"], h, state, cfg.attn, position=position,
+                window=window, **common)
+        x = x + mix
+        h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
+        if cfg.moe:
+            f, aux = ll.moe_apply(params["ffn"], h2, cfg.moe)
+        else:
+            f = ll.mlp_apply(params["ffn"], h2, cfg.mlp_kind)
+        x = x + f
+    elif kind == "rec":
+        if mode == "train":
+            mix, _ = rec.rglru_apply(params["rec"], h, None)
+        elif mode == "prefill":
+            mix, new_state = rec.rglru_apply(params["rec"], h, None)
+        else:
+            mix, new_state = rec.rglru_apply(params["rec"], h, state)
+        x = x + mix
+        h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
+        if cfg.moe:
+            f, aux = ll.moe_apply(params["ffn"], h2, cfg.moe)
+        else:
+            f = ll.mlp_apply(params["ffn"], h2, cfg.mlp_kind)
+        x = x + f
+    elif kind == "rwkv":
+        if mode == "train":
+            mix, _ = rec.rwkv6_apply(params["tmix"], h, cfg.n_heads, None)
+            x = x + mix
+            h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
+            f, _ = rec.rwkv6_channel_mix(params["cmix"], h2, None)
+            x = x + f
+        else:
+            tstate, cshift = (None, None) if mode == "prefill" else state
+            mix, tstate = rec.rwkv6_apply(params["tmix"], h, cfg.n_heads,
+                                          tstate)
+            x = x + mix
+            h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
+            f, cshift = rec.rwkv6_channel_mix(params["cmix"], h2, cshift)
+            x = x + f
+            new_state = (tstate, cshift)
+    return x, aux, new_state
+
+
+def _embed_inputs(params, cfg: ModelConfig, batch: dict) -> Array:
+    dt = cfg.param_dtype
+    if cfg.modality == "audio":
+        x = batch["frames"].astype(dt)
+        if "mask" in batch:
+            me = params["mask_embed"].astype(dt)
+            x = jnp.where(batch["mask"][..., None], me[None, None], x)
+        return x
+    tok = params["embed"][batch["tokens"]]
+    if cfg.embed_scale:
+        tok = tok * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.modality == "vlm":
+        patches = batch["patch_embeds"].astype(dt)
+        return jnp.concatenate([patches, tok.astype(dt)], axis=1)
+    return tok.astype(dt)
+
+
+def _logits(params, cfg: ModelConfig, x: Array) -> Array:
+    x = ll.apply_norm(cfg.norm_kind, params["final_norm"], x)
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.logit_softcap > 0:
+        c = cfg.logit_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits
+
+
+def forward_train(params, cfg: ModelConfig, batch: dict,
+                  rng: Optional[Array] = None) -> tuple[Array, Array]:
+    """Full forward. Returns (logits (B, L, V), aux_loss)."""
+    x = _embed_inputs(params, cfg, batch)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def unit_body(x, xs):
+        unit_params, uidx = xs
+        aux_u = jnp.zeros((), jnp.float32)
+        for i, kind in enumerate(cfg.block_pattern):
+            lk = jax.random.fold_in(rng, uidx * 16 + i)
+            x, aux, _ = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
+                                     layer_key=lk, mode="train")
+            aux_u = aux_u + aux
+        return x, aux_u
+
+    if cfg.n_units > 0:
+        body = unit_body
+        policy = REMAT_POLICIES[cfg.remat]
+        if policy is not None:
+            pol = (getattr(jax.checkpoint_policies, policy)
+                   if policy != "nothing_saveable"
+                   else jax.checkpoint_policies.nothing_saveable)
+            body = jax.checkpoint(unit_body, policy=pol,
+                                  prevent_cse=not cfg.scan_layers)
+        if cfg.scan_layers:
+            x, auxs = jax.lax.scan(
+                body, x, (params["units"], jnp.arange(cfg.n_units)))
+            aux_total = aux_total + jnp.sum(auxs)
+        else:
+            units = params["units"]
+            for u in range(cfg.n_units):
+                up = jax.tree_util.tree_map(lambda a: a[u], units)
+                x, aux_u = body(x, (up, jnp.asarray(u)))
+                aux_total = aux_total + aux_u
+    for i in range(cfg.n_rem):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        lk = jax.random.fold_in(rng, 10_000 + i)
+        x, aux, _ = _apply_block(params["rem"][i], x, cfg, kind,
+                                 layer_key=lk, mode="train")
+        aux_total = aux_total + aux
+    return _logits(params, cfg, x), aux_total
+
+
+def collect_qk(params, cfg: ModelConfig, batch: dict) -> dict:
+    """Run the stack and capture post-RoPE q/k of every attention block.
+
+    Calibration tap for the whitening init (App. C): returns
+    {"unit<u>/b<i>": (q, k)} with q: (B, G, Hg, L, dh), k: (B, G, 1, L, dh).
+    Runs the layer loop in Python (no scan) — intended for the reduced /
+    bench-scale models used in calibration passes.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    taps: dict = {}
+    kinds = cfg.layer_kinds()
+    plen = len(cfg.block_pattern)
+
+    def get_block_params(li: int):
+        u, i = divmod(li, plen)
+        if u < cfg.n_units:
+            return jax.tree_util.tree_map(lambda a: a[u],
+                                          params["units"])[f"b{i}"], u, i
+        return params["rem"][li - cfg.n_units * plen], u, i
+
+    for li, kind in enumerate(kinds):
+        bp, u, i = get_block_params(li)
+        if kind in ("attn", "local"):
+            h = ll.apply_norm(cfg.norm_kind, bp["ln1"], x)
+            q, k, _ = ab._project(bp["attn"], h, cfg.n_heads, cfg.n_kv,
+                                  cfg.head_dim, cfg.qk_norm,
+                                  jnp.arange(h.shape[1]), cfg.rope_theta)
+            taps[f"unit{u}/b{i}"] = (q, k)
+        x, _, _ = _apply_block(bp, x, cfg, kind,
+                               layer_key=jax.random.PRNGKey(li),
+                               mode="train")
+    return taps
+
+
+def whitening_calibrate(params, cfg: ModelConfig, batch: dict,
+                        shrink: float = 0.05):
+    """Set every darkformer m_mat to Lambda^{-1/2} from a calibration batch
+    (scaled q/k statistics; the d^{-1/4} temperature is absorbed so the
+    covariance matches what the feature map actually sees)."""
+    from repro.core import calibration as cal
+    if cfg.attn.kind != "darkformer":
+        return params
+    taps = collect_qk(params, cfg, batch)
+    scale = cfg.head_dim ** -0.25
+    new = jax.tree_util.tree_map(lambda a: a, params)
+    plen = len(cfg.block_pattern)
+    for name, (q, k) in taps.items():
+        u = int(name.split("/")[0][4:])
+        bi = name.split("/")[1]
+        if u < cfg.n_units:
+            fp = new["units"][bi]["attn"]["feat"]
+        else:
+            fp = new["rem"][u * plen + int(bi[1:])
+                            - cfg.n_units * plen]["attn"]["feat"]
+        g = fp["m_mat"].shape[-3] if fp["m_mat"].ndim > 2 else \
+            fp["m_mat"].shape[0]
+        r = fp["m_mat"].shape[-2]
+        mats = []
+        for gi in range(q.shape[1]):
+            mats.append(cal.whiten_m_from_qk(
+                q[:, gi] * scale, k[:, gi] * scale, r, shrink))
+        m_new = jnp.stack(mats)
+        if fp["m_mat"].ndim > 2 and u < cfg.n_units:
+            fp["m_mat"] = fp["m_mat"].at[u].set(
+                m_new.astype(fp["m_mat"].dtype))
+        else:
+            fp["m_mat"] = m_new.astype(fp["m_mat"].dtype)
+    return new
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def loss_fn(params, cfg: ModelConfig, batch: dict,
+            rng: Optional[Array] = None) -> tuple[Array, dict]:
+    logits, aux = forward_train(params, cfg, batch, rng)
+    labels = batch["labels"]
+    if cfg.modality == "vlm":
+        logits = logits[:, -labels.shape[1]:]        # loss on text positions
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll_tok = jnp.take_along_axis(logits, labels[..., None],
+                                 axis=-1)[..., 0] - logz
+    if cfg.modality == "audio" and "mask" in batch:
+        wmask = batch["mask"].astype(jnp.float32)
+    else:
+        wmask = (labels >= 0).astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(wmask), 1.0)
+    ce = -jnp.sum(ll_tok * wmask) / denom
+    zl = cfg.z_loss * jnp.sum(jnp.square(logz) * wmask) / denom
+    loss = ce + zl + aux
+    acc = jnp.sum((jnp.argmax(logits, -1) == labels) * wmask) / denom
+    return loss, {"loss": loss, "ce": ce, "z_loss": zl, "aux": aux,
+                  "accuracy": acc}
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def _init_block_state(cfg: ModelConfig, kind: str, b: int, max_len: int):
+    if kind in ("attn", "local"):
+        return ab.init_attn_serve_state(
+            cfg.attn, b, cfg.n_heads, cfg.n_kv, cfg.head_dim, max_len,
+            cfg.window if kind == "local" else None)
+    if kind == "rec":
+        return rec.init_rglru_state(b, cfg.rnn_width)
+    if kind == "rwkv":
+        return (rec.init_rwkv_state(b, cfg.d_model, cfg.n_heads),
+                jnp.zeros((b, cfg.d_model), jnp.float32))
+    raise ValueError(kind)
+
+
+def init_serve_state(cfg: ModelConfig, b: int, max_len: int) -> dict:
+    state: dict[str, Any] = {}
+    if cfg.n_units > 0:
+        def one_unit(_):
+            return {f"b{i}": _init_block_state(cfg, kind, b, max_len)
+                    for i, kind in enumerate(cfg.block_pattern)}
+        state["units"] = jax.vmap(one_unit)(jnp.arange(cfg.n_units))
+    if cfg.n_rem:
+        state["rem"] = [
+            _init_block_state(
+                cfg, cfg.block_pattern[i % len(cfg.block_pattern)], b,
+                max_len)
+            for i in range(cfg.n_rem)]
+    state["pos"] = jnp.zeros((), jnp.int32)
+    return state
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int
+            ) -> tuple[Array, dict]:
+    """Full-prompt pass; returns (last-position logits, serve state)."""
+    x = _embed_inputs(params, cfg, batch)
+    state: dict[str, Any] = {}
+
+    def unit_body(x, unit_params):
+        states = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, _, st = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
+                                    layer_key=None, state=max_len,
+                                    mode="prefill")
+            states[f"b{i}"] = st
+        return x, states
+
+    if cfg.n_units > 0:
+        if cfg.scan_layers:
+            x, unit_states = jax.lax.scan(unit_body, x, params["units"])
+            state["units"] = unit_states
+        else:
+            per_unit = []
+            for u in range(cfg.n_units):
+                up = jax.tree_util.tree_map(lambda a: a[u],
+                                            params["units"])
+                x, st_u = unit_body(x, up)
+                per_unit.append(st_u)
+            state["units"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_unit)
+    if cfg.n_rem:
+        state["rem"] = []
+        for i in range(cfg.n_rem):
+            kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+            x, _, st = _apply_block(params["rem"][i], x, cfg, kind,
+                                    layer_key=None, state=max_len,
+                                    mode="prefill")
+            state["rem"].append(st)
+    state["pos"] = jnp.asarray(x.shape[1], jnp.int32)
+    return _logits(params, cfg, x[:, -1:]), state
+
+
+def decode_step(params, cfg: ModelConfig, token: Array, state: dict
+                ) -> tuple[Array, dict]:
+    """One serving step. token: (B,) int32 -> (logits (B, V), new state)."""
+    pos = state["pos"]
+    x = params["embed"][token][:, None]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    x = x.astype(cfg.param_dtype)
+    new_state: dict[str, Any] = {"pos": pos + 1}
+
+    def unit_body(x, xs):
+        unit_params, unit_state = xs
+        new_states = {}
+        for i, kind in enumerate(cfg.block_pattern):
+            x, _, st = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
+                                    layer_key=None,
+                                    state=unit_state[f"b{i}"],
+                                    mode="decode", position=pos)
+            new_states[f"b{i}"] = st
+        return x, new_states
+
+    if cfg.n_units > 0:
+        if cfg.scan_layers:
+            x, unit_states = jax.lax.scan(
+                unit_body, x, (params["units"], state["units"]))
+            new_state["units"] = unit_states
+        else:
+            per_unit = []
+            for u in range(cfg.n_units):
+                sl = jax.tree_util.tree_map(lambda a: a[u],
+                                            (params["units"],
+                                             state["units"]))
+                x, st_u = unit_body(x, sl)
+                per_unit.append(st_u)
+            new_state["units"] = jax.tree_util.tree_map(
+                lambda *xs: jnp.stack(xs), *per_unit)
+    if cfg.n_rem:
+        new_state["rem"] = []
+        for i in range(cfg.n_rem):
+            kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+            x, _, st = _apply_block(params["rem"][i], x, cfg, kind,
+                                    layer_key=None, state=state["rem"][i],
+                                    mode="decode", position=pos)
+            new_state["rem"].append(st)
+    return _logits(params, cfg, x)[:, 0], new_state

@@ -1,0 +1,240 @@
+"""Recurrent mixers: RG-LRU (Griffin / RecurrentGemma) and RWKV-6.
+
+Both are attention-free sequence mixers with O(1) decode state; they fill
+the `rec` / `rwkv` slots in hybrid block patterns. The paper's PRF technique
+does not apply to them (no softmax kernel) — see DESIGN §Arch-applicability.
+
+RG-LRU (arXiv:2402.19427):
+    x, g = W_x u, W_g u                  (both d_rnn)
+    x <- causal depthwise conv1d(x, k=4)
+    r_t = sigmoid(W_a x_t);  i_t = sigmoid(W_i x_t)
+    log a_t = -c * softplus(lam) * r_t          (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)     [associative scan]
+    out = W_o (h * gelu(g))
+
+RWKV-6 "Finch" (arXiv:2404.05892): token-shift lerp + data-dependent decay
+    w_t = exp(-exp(lam_w + tanh(x_t A) B)), per-head wkv state S (dh x dh):
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T ;  o_t = r_t (S_{t-1} + diag(u) k v^T)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as ll
+
+Array = jax.Array
+
+_RGLRU_C = 8.0
+_CONV_K = 4
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block
+# ---------------------------------------------------------------------------
+
+class RGLRUState(NamedTuple):
+    h: Array          # (B, d_rnn) f32
+    conv: Array       # (B, CONV_K-1, d_rnn) — trailing inputs for the conv
+
+
+def rglru_init(key, d_model: int, d_rnn: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 6)
+    # lam init so that a^c*softplus in (0.9, 0.999) roughly (Griffin A.2).
+    u = jax.random.uniform(ks[5], (d_rnn,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _RGLRU_C))
+    return {
+        "wx": ll.trunc_normal(ks[0], (d_model, d_rnn), 1.0, dtype),
+        "wg": ll.trunc_normal(ks[1], (d_model, d_rnn), 1.0, dtype),
+        "conv_w": ll.trunc_normal(ks[2], (_CONV_K, d_rnn), float(_CONV_K),
+                                  dtype),
+        "wa": ll.trunc_normal(ks[3], (d_rnn, d_rnn), 1.0, dtype),
+        "wi": ll.trunc_normal(ks[4], (d_rnn, d_rnn), 1.0, dtype),
+        "lam": lam,
+        "wo": ll.trunc_normal(ks[1], (d_rnn, d_model), 1.0, dtype),
+    }
+
+
+def _causal_conv(x: Array, w: Array, prefix: Optional[Array] = None):
+    """Depthwise causal conv. x: (B, L, d); w: (K, d); prefix: (B,K-1,d)."""
+    b, l, d = x.shape
+    if prefix is None:
+        prefix = jnp.zeros((b, _CONV_K - 1, d), x.dtype)
+    xp = jnp.concatenate([prefix, x], axis=1)
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(_CONV_K):
+        out = out + xp[:, i:i + l].astype(jnp.float32) * w[i].astype(
+            jnp.float32)
+    return out.astype(x.dtype), xp[:, -(_CONV_K - 1):]
+
+
+def _rglru_scan(x: Array, a: Array, i_gate: Array, h0: Array):
+    """h_t = a_t h_{t-1} + sqrt(1-a_t^2) (i_t * x_t) via associative scan."""
+    a = a.astype(jnp.float32)
+    inp = jnp.sqrt(jnp.clip(1.0 - a * a, 0.0)) * (
+        i_gate.astype(jnp.float32) * x.astype(jnp.float32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, b1 * a2 + b2
+
+    a_seq = jnp.concatenate([jnp.ones_like(a[:, :1]) if h0 is None else
+                             jnp.ones_like(a[:, :1]), a], axis=1)
+    b_seq = jnp.concatenate([h0[:, None].astype(jnp.float32), inp], axis=1)
+    _, hs = jax.lax.associative_scan(combine, (a_seq, b_seq), axis=1)
+    return hs[:, 1:], hs[:, -1]
+
+
+def rglru_apply(params: dict, u: Array,
+                state: Optional[RGLRUState] = None
+                ) -> tuple[Array, RGLRUState]:
+    """u: (B, L, d_model) -> (out, new_state)."""
+    x = u @ params["wx"]
+    g = u @ params["wg"]
+    prefix = None if state is None else state.conv
+    x, conv_tail = _causal_conv(x, params["conv_w"], prefix)
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32))
+    i_gate = jax.nn.sigmoid(xf @ params["wi"].astype(jnp.float32))
+    log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = u.shape[0]
+    h0 = (jnp.zeros((b, x.shape[-1]), jnp.float32) if state is None
+          else state.h)
+    hs, h_last = _rglru_scan(x, a, i_gate, h0)
+    out = (hs * jax.nn.gelu(g.astype(jnp.float32))).astype(u.dtype)
+    return out @ params["wo"], RGLRUState(h=h_last, conv=conv_tail)
+
+
+def rglru_decode(params: dict, u: Array, state: RGLRUState
+                 ) -> tuple[Array, RGLRUState]:
+    """Single-token step. u: (B, 1, d_model)."""
+    return rglru_apply(params, u, state)
+
+
+def init_rglru_state(b: int, d_rnn: int) -> RGLRUState:
+    return RGLRUState(h=jnp.zeros((b, d_rnn), jnp.float32),
+                      conv=jnp.zeros((b, _CONV_K - 1, d_rnn), jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# RWKV-6 block (time mix; the channel mix lives in lm.py as the "ffn")
+# ---------------------------------------------------------------------------
+
+class RWKVState(NamedTuple):
+    s: Array          # (B, H, dh, dh) f32 wkv state
+    shift: Array      # (B, d_model)   last token (time-mix token shift)
+
+
+def rwkv6_init(key, d_model: int, n_heads: int, decay_rank: int = 64,
+               dtype=jnp.float32) -> dict:
+    dh = d_model // n_heads
+    ks = jax.random.split(key, 10)
+    return {
+        "mu": 0.5 * jnp.ones((5, d_model), jnp.float32),   # r,k,v,w,g mixes
+        "wr": ll.trunc_normal(ks[0], (d_model, d_model), 1.0, dtype),
+        "wk": ll.trunc_normal(ks[1], (d_model, d_model), 1.0, dtype),
+        "wv": ll.trunc_normal(ks[2], (d_model, d_model), 1.0, dtype),
+        "wg": ll.trunc_normal(ks[3], (d_model, d_model), 1.0, dtype),
+        "decay_a": ll.trunc_normal(ks[4], (d_model, decay_rank), 1.0,
+                                   jnp.float32),
+        "decay_b": ll.trunc_normal(ks[5], (decay_rank, d_model), 1.0,
+                                   jnp.float32),
+        "lam_w": jnp.zeros((d_model,), jnp.float32),
+        "u": jnp.zeros((n_heads, dh), jnp.float32),        # bonus
+        "ln_x": ll.layernorm_init(d_model),                # group-norm-ish
+        "wo": ll.trunc_normal(ks[6], (d_model, d_model), 1.0, dtype),
+    }
+
+
+def _token_shift(x: Array, last: Array) -> Array:
+    """x_{t-1} with x_{-1} = last. x: (B, L, d); last: (B, d)."""
+    return jnp.concatenate([last[:, None], x[:, :-1]], axis=1)
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """r,k,v,w: (B, H, L, dh); u: (H, dh); s0: (B, H, dh, dh)."""
+    def step(s, xs):
+        r_t, k_t, v_t, w_t = xs            # (B, H, dh)
+        kv = k_t[..., :, None] * v_t[..., None, :]
+        o = jnp.einsum("bhd,bhde->bhe", r_t,
+                       s + u[None, :, :, None] * kv)
+        s = w_t[..., :, None] * s + kv
+        return s, o
+
+    seq = tuple(jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+                for t in (r, k, v, w))
+    s_last, outs = jax.lax.scan(step, s0.astype(jnp.float32), seq)
+    return jnp.moveaxis(outs, 0, 2), s_last
+
+
+def rwkv6_apply(params: dict, x: Array, n_heads: int,
+                state: Optional[RWKVState] = None
+                ) -> tuple[Array, RWKVState]:
+    """x: (B, L, d_model) -> (out, state)."""
+    b, l, d = x.shape
+    dh = d // n_heads
+    last = (jnp.zeros((b, d), x.dtype) if state is None
+            else state.shift.astype(x.dtype))
+    xprev = _token_shift(x, last)
+    mu = params["mu"]
+
+    def mix(i):
+        return x + (xprev - x) * mu[i].astype(x.dtype)
+
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ params["wr"]).reshape(b, l, n_heads, dh)
+    k = (xk @ params["wk"]).reshape(b, l, n_heads, dh)
+    v = (xv @ params["wv"]).reshape(b, l, n_heads, dh)
+    g = xg @ params["wg"]
+    # data-dependent decay (the "Finch" signature)
+    dd = jnp.tanh(xw.astype(jnp.float32) @ params["decay_a"]) @ params[
+        "decay_b"]
+    w = jnp.exp(-jnp.exp(params["lam_w"] + dd))        # (B, L, d) in (0,1)
+    w = w.reshape(b, l, n_heads, dh)
+    r, k, v, w = (jnp.moveaxis(t, 2, 1) for t in (r, k, v, w))  # (B,H,L,dh)
+    s0 = (jnp.zeros((b, n_heads, dh, dh), jnp.float32) if state is None
+          else state.s)
+    o, s_last = _wkv_scan(r, k, v, w, params["u"], s0)
+    o = jnp.moveaxis(o, 1, 2).reshape(b, l, d)
+    o = ll.layernorm(params["ln_x"], o)
+    o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
+    out = o.astype(x.dtype) @ params["wo"]
+    return out, RWKVState(s=s_last, shift=x[:, -1].astype(jnp.float32))
+
+
+def init_rwkv_state(b: int, d_model: int, n_heads: int) -> RWKVState:
+    dh = d_model // n_heads
+    return RWKVState(s=jnp.zeros((b, n_heads, dh, dh), jnp.float32),
+                     shift=jnp.zeros((b, d_model), jnp.float32))
+
+
+def rwkv6_channel_mix_init(key, d_model: int, d_ff: int,
+                           dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu": 0.5 * jnp.ones((2, d_model), jnp.float32),
+        "wk": ll.trunc_normal(k1, (d_model, d_ff), 1.0, dtype),
+        "wv": ll.trunc_normal(k2, (d_ff, d_model), 1.0, dtype),
+        "wr": ll.trunc_normal(k3, (d_model, d_model), 1.0, dtype),
+    }
+
+
+def rwkv6_channel_mix(params: dict, x: Array,
+                      last: Optional[Array] = None
+                      ) -> tuple[Array, Array]:
+    """RWKV channel mix: out = sigmoid(W_r xr) * (W_v relu(W_k xk)^2)."""
+    b, l, d = x.shape
+    last = jnp.zeros((b, d), x.dtype) if last is None else last.astype(
+        x.dtype)
+    xprev = _token_shift(x, last)
+    mu = params["mu"]
+    xk = x + (xprev - x) * mu[0].astype(x.dtype)
+    xr = x + (xprev - x) * mu[1].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(xk @ params["wk"]))
+    out = jax.nn.sigmoid((xr @ params["wr"]).astype(jnp.float32)).astype(
+        x.dtype) * (k @ params["wv"])
+    return out, x[:, -1].astype(jnp.float32)

@@ -1,0 +1,4 @@
+"""Optimizers + schedules, from scratch (no optax in this container)."""
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               global_norm, clip_by_global_norm)
+from repro.optim.schedules import (constant, cosine_warmup, linear_warmup)

@@ -1,0 +1,123 @@
+"""AdamW with decoupled weight decay + global-norm clipping.
+
+Moments are kept in f32 regardless of param dtype (bf16 training keeps
+master statistics in f32; the update is computed in f32 and cast back).
+``factored_second_moment`` switches v to Adafactor-style row/col factors for
+matrices — an optional memory saver for the 235B config.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    factored_second_moment: bool = False
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree: PyTree, max_norm: float) -> tuple[PyTree,
+                                                                Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree_util.tree_map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), tree), \
+        norm
+
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adamw_init(params: PyTree, cfg: AdamWConfig) -> dict:
+    def zeros_like_f32(p):
+        return jnp.zeros(p.shape, jnp.float32)
+
+    if cfg.factored_second_moment:
+        def v_init(p):
+            if _factored(p.shape):
+                return {"row": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                         jnp.float32)}
+            return zeros_like_f32(p)
+        v = jax.tree_util.tree_map(v_init, params)
+    else:
+        v = jax.tree_util.tree_map(zeros_like_f32, params)
+    return {"mu": jax.tree_util.tree_map(zeros_like_f32, params),
+            "nu": v,
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(params: PyTree, grads: PyTree, state: dict,
+                 cfg: AdamWConfig, lr: Array) -> tuple[PyTree, dict, dict]:
+    """One step. Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    count = state["count"] + 1
+    c1 = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    c2 = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd_mu(mu, g):
+        return cfg.b1 * mu + (1.0 - cfg.b1) * g.astype(jnp.float32)
+
+    new_mu = jax.tree_util.tree_map(upd_mu, state["mu"], grads)
+
+    if cfg.factored_second_moment:
+        def upd_nu(nu, g):
+            g2 = jnp.square(g.astype(jnp.float32)) + 1e-30
+            if isinstance(nu, dict):
+                return {"row": cfg.b2 * nu["row"]
+                        + (1 - cfg.b2) * jnp.mean(g2, axis=-1),
+                        "col": cfg.b2 * nu["col"]
+                        + (1 - cfg.b2) * jnp.mean(g2, axis=-2)}
+            return cfg.b2 * nu + (1 - cfg.b2) * g2
+
+        def nu_to_v(nu):
+            if isinstance(nu, dict):
+                r = nu["row"][..., :, None]
+                c = nu["col"][..., None, :]
+                denom = jnp.mean(nu["row"], axis=-1)[..., None, None] + 1e-30
+                return r * c / denom
+            return nu
+
+        new_nu = jax.tree_util.tree_map(upd_nu, state["nu"], grads,
+                                        is_leaf=lambda x: isinstance(x, dict)
+                                        and "row" in x)
+        v_eff = jax.tree_util.tree_map(nu_to_v, new_nu,
+                                       is_leaf=lambda x: isinstance(x, dict)
+                                       and "row" in x)
+    else:
+        def upd_nu(nu, g):
+            return cfg.b2 * nu + (1 - cfg.b2) * jnp.square(
+                g.astype(jnp.float32))
+        new_nu = jax.tree_util.tree_map(upd_nu, state["nu"], grads)
+        v_eff = new_nu
+
+    def upd_p(p, mu, v):
+        m_hat = mu / c1
+        v_hat = v / c2
+        step = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd_p, params, new_mu, v_eff)
+    new_state = {"mu": new_mu, "nu": new_nu, "count": count}
+    return new_params, new_state, {"grad_norm": gnorm,
+                                   "lr": jnp.asarray(lr, jnp.float32)}

@@ -1,0 +1,7 @@
+"""Distribution: sharding rules, gradient compression, SP helpers."""
+from repro.parallel.sharding import (param_specs, opt_state_specs,
+                                     batch_specs, serve_state_specs,
+                                     make_shardings, dp_axes,
+                                     constrain_batch_axis)
+from repro.parallel.compression import (compressed_psum_mean,
+                                        init_error_feedback)

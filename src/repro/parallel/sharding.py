@@ -1,0 +1,282 @@
+"""Sharding rules: logical param/batch/state layouts -> PartitionSpecs.
+
+Axis roles (DESIGN §6):
+  pod    — data parallelism across pods (DCN)
+  data   — data parallelism + FSDP/ZeRO param sharding (ICI)
+  model  — tensor/expert parallelism (ICI)
+
+Rules are matched on parameter tree paths. Scanned-unit params carry a
+leading n_units dim which gets a None prefix automatically (detected via
+the "units" path component). Activations are constrained on the batch axis
+at block boundaries; internals are left to XLA SPMD propagation from the
+weight specs (MaxText-style).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# (regex over keystr path, spec WITHOUT the scan-unit prefix)
+#
+# RULE OF THUMB (learned the hard way — see EXPERIMENTS.md §Perf): never
+# shard a matmul CONTRACTION dim over 'data'. The batch is data-sharded,
+# so a d-over-data weight makes XLA SPMD either all-reduce activations
+# over 'data' or replicate the batch (observed: full-batch f32 buffers,
+# 12.9 GB logits all-reduces). Weight dims sharded over 'data' must be
+# non-contraction dims (ZeRO-style weight all-gather, bytes = params).
+_PARAM_RULES: list[tuple[str, P]] = [
+    (r"\['embed'\]$",               P("model", None)),     # vocab x d
+    (r"\['lm_head'\]$",             P(None, "model")),
+    (r"\['mask_embed'\]$",          P(None)),
+    (r"\['attn'\]\['wq'\]$",        P(None, ("model", "data"))),
+    (r"\['attn'\]\['wk'\]$",        P(None, ("model", "data"))),
+    (r"\['attn'\]\['wv'\]$",        P(None, ("model", "data"))),
+    (r"\['attn'\]\['wo'\]$",        P("model", "data")),
+    (r"\['feat'\]\['w'\]$",         P(None, None, None)),  # (G, m, r) small
+    (r"\['feat'\]\['m_mat'\]$",     P(None, None, None)),
+    (r"\['(q_norm|k_norm)'\]\['scale'\]$", P(None)),
+    # dense mlp
+    (r"\['ffn'\]\['w_gate'\]$",     P(None, ("model", "data"))),
+    (r"\['ffn'\]\['w_up'\]$",       P(None, ("model", "data"))),
+    (r"\['ffn'\]\['w_out'\]$",      P("model", "data")),
+    # moe (E, d, f) / (E, f, d): experts on model (EP), d_model on data
+    (r"\['ffn'\]\['router'\]$",     P(None, None)),
+    # rg-lru
+    (r"\['rec'\]\['wx'\]$",         P(None, ("model", "data"))),
+    (r"\['rec'\]\['wg'\]$",         P(None, ("model", "data"))),
+    (r"\['rec'\]\['conv_w'\]$",     P(None, "model")),
+    (r"\['rec'\]\['wa'\]$",         P("model", None)),
+    (r"\['rec'\]\['wi'\]$",         P("model", None)),
+    (r"\['rec'\]\['lam'\]$",        P("model")),
+    (r"\['rec'\]\['wo'\]$",         P("model", "data")),
+    # rwkv
+    (r"\['tmix'\]\['w[rkvg]'\]$",   P(None, ("model", "data"))),
+    (r"\['tmix'\]\['wo'\]$",        P("model", "data")),
+    (r"\['tmix'\]\['decay_a'\]$",   P(None, None)),
+    (r"\['tmix'\]\['decay_b'\]$",   P(None, "model")),
+    (r"\['tmix'\]\['u'\]$",         P(None, None)),
+    (r"\['tmix'\]\['mu'\]$",        P(None, None)),
+    (r"\['tmix'\]\['lam_w'\]$",     P(None)),
+    (r"\['tmix'\]\['ln_x'\]",       P(None)),
+    (r"\['cmix'\]\['wk'\]$",        P(None, ("model", "data"))),
+    (r"\['cmix'\]\['wv'\]$",        P("model", "data")),
+    (r"\['cmix'\]\['wr'\]$",        P(None, ("model", "data"))),
+    (r"\['cmix'\]\['mu'\]$",        P(None, None)),
+    # norms / misc
+    (r"\['scale'\]$",               P(None)),
+    (r"\['bias'\]$",                P(None)),
+]
+
+_MOE_RULES: list[tuple[str, P]] = [
+    (r"\['ffn'\]\['w_gate'\]$",     P("model", None, "data")),
+    (r"\['ffn'\]\['w_up'\]$",       P("model", None, "data")),
+    (r"\['ffn'\]\['w_out'\]$",      P("model", None, "data")),
+]
+
+# When num_experts doesn't divide the model axis (e.g. granite-moe's 40
+# experts on a 16-way axis) the EP spec above gets dropped by _divisible
+# and expert compute would run REPLICATED across 'model' (16x redundant
+# flops — caught by the §Roofline useful-flops ratio). Fall back to
+# sharding the per-expert hidden dim over 'model' instead (TP inside each
+# expert; dispatch stays data-local).
+_MOE_RULES_TP: list[tuple[str, P]] = [
+    (r"\['ffn'\]\['w_gate'\]$",     P(None, None, "model")),
+    (r"\['ffn'\]\['w_up'\]$",       P(None, None, "model")),
+    (r"\['ffn'\]\['w_out'\]$",      P(None, "model", None)),
+]
+
+
+def dp_axes(mesh: Mesh) -> tuple:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _match(path_str: str, moe: bool, moe_tp: bool = False) -> Optional[P]:
+    if moe:
+        rules = _MOE_RULES_TP if moe_tp else _MOE_RULES
+        for pat, spec in rules:
+            if re.search(pat, path_str):
+                return spec
+    for pat, spec in _PARAM_RULES:
+        if re.search(pat, path_str):
+            return spec
+    return None
+
+
+def _divisible(shape, spec: P, mesh: Mesh) -> P:
+    """Drop sharding on dims that don't divide evenly (keeps lowering legal
+    for small dims like MQA kv heads)."""
+    new = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) -
+                                                       len(spec))):
+        if ax is None:
+            new.append(None)
+            continue
+        size = 1
+        for a in (ax if isinstance(ax, tuple) else (ax,)):
+            size *= mesh.shape[a]
+        new.append(ax if dim % size == 0 else None)
+    return P(*new)
+
+
+def param_specs(params: PyTree, mesh: Mesh, moe: bool = False,
+                preset: str = "2d", shard_features: bool = False,
+                overrides: tuple = ()) -> PyTree:
+    """PartitionSpec tree mirroring ``params`` (works on ShapeDtypeStructs).
+
+    preset:
+      "2d"   — TP over 'model' + FSDP over 'data' (the rule table above).
+      "fsdp" — no tensor parallelism: every >=2-D param sharded on its
+               largest dim over the combined ('data','model') axes
+               (ZeRO-3); batch must then also span both axes.
+    shard_features — shard the PRF feature dim m of the per-group
+      projection W over 'model' (perf experiment: distributes the
+      (L x m) feature activations and the (m x dv) scan state).
+    """
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    # detect EP-infeasible expert counts once (see _MOE_RULES_TP)
+    moe_tp = False
+    if moe:
+        for path, leaf in flat:
+            ps = jax.tree_util.keystr(path)
+            if ps.endswith("['ffn']['w_gate']"):
+                e_dim = leaf.shape[1 if "['units']" in ps else 0]
+                moe_tp = e_dim % mesh.shape["model"] != 0
+                break
+    specs = []
+    for path, leaf in flat:
+        ps = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        scanned = "['units']" in ps
+        if preset == "fsdp":
+            body = shape[1:] if scanned else shape
+            if len(body) >= 2:
+                big = max(range(len(body)), key=lambda i: body[i])
+                t = [None] * len(body)
+                t[big] = ("data", "model")
+                spec = P(*t)
+            else:
+                spec = P(*([None] * len(body)))
+            if scanned:
+                spec = P(*((None,) + tuple(spec)))
+            specs.append(_divisible(shape, spec, mesh))
+            continue
+        spec = None
+        for pat, tspec in overrides:
+            if re.search(pat, ps):
+                spec = P(*tspec)
+                break
+        if spec is None:
+            spec = _match(ps, moe, moe_tp)
+        if shard_features and "['feat']" in ps:
+            # (G, m, r) / (G, r, d): shard m (W's dim -2) over model
+            spec = P(None, "model", None) if ps.endswith("['w']") else spec
+        if spec is None:
+            spec = P(*([None] * len(shape)))
+        if scanned:
+            spec = P(*((None,) + tuple(spec)))
+        # pad/truncate to rank
+        t = tuple(spec)[: len(shape)]
+        t = t + (None,) * (len(shape) - len(t))
+        specs.append(_divisible(shape, P(*t), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def opt_state_specs(opt_state: PyTree, pspecs: PyTree, mesh: Mesh) -> PyTree:
+    """Optimizer-state specs mirror the param specs (mu/nu shadow params;
+    factored nu rows/cols inherit the reduced spec; count replicated)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state)
+    pflat = {jax.tree_util.keystr(p): s
+             for p, s in jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+    specs = []
+    for path, leaf in flat:
+        ps = jax.tree_util.keystr(path)
+        if ps.endswith("['count']"):
+            specs.append(P())
+            continue
+        # strip the leading ['mu'] / ['nu'] component and factored suffix
+        inner = ps.split("]", 1)[1]
+        suffix = None
+        if inner.endswith("['row']") or inner.endswith("['col']"):
+            suffix = inner[-6:-2]
+            inner = inner[: -len("['row']")]
+        base = pflat.get(inner)
+        if base is None:
+            specs.append(P(*([None] * leaf.ndim)))
+            continue
+        t = tuple(base)
+        if suffix == "row":            # param shape minus last dim
+            t = t[:-1]
+        elif suffix == "col":          # minus second-to-last dim
+            t = t[:-2] + t[-1:]
+        t = t[: leaf.ndim] + (None,) * max(0, leaf.ndim - len(t))
+        specs.append(_divisible(tuple(leaf.shape), P(*t), mesh))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch: PyTree, mesh: Mesh, preset: str = "2d") -> PyTree:
+    """Shard the leading batch dim over the DP axes (replicate if it does
+    not divide — e.g. the long_500k single-sequence cell). Under the
+    "fsdp" preset the batch spans ('data','model') too."""
+    dp = dp_axes(mesh)
+    if preset == "fsdp":
+        dp = dp + ("model",)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+
+    def spec(leaf):
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        if shape[0] % dp_size == 0 and shape[0] > 0:
+            return P(dp, *([None] * (len(shape) - 1)))
+        return P(*([None] * len(shape)))
+    return jax.tree_util.tree_map(spec, batch)
+
+
+def serve_state_specs(state: PyTree, mesh: Mesh) -> PyTree:
+    """Serving state: batch on DP axes where divisible; the KV-cache /
+    linear-state head-group dim additionally on 'model' where divisible."""
+    dp = dp_axes(mesh)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    msize = mesh.shape.get("model", 1)
+
+    def spec(path, leaf):
+        ps = jax.tree_util.keystr(path)
+        shape = tuple(leaf.shape)
+        if not shape:
+            return P()
+        off = 1 if "['units']" in ps else 0   # scanned leading dim
+        axes: list = [None] * len(shape)
+        if len(shape) > off and shape[off] % dp_size == 0:
+            axes[off] = dp
+        # group/head dim right after batch for kv caches & linear states
+        if len(shape) > off + 1 and shape[off + 1] % msize == 0 and \
+                any(t in ps for t in ("kv_k", "kv_v", "'s'", "'z'", "'c'")):
+            axes[off + 1] = "model"
+        return P(*axes)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec(p, l) for p, l in flat])
+
+
+def make_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain_batch_axis(x, mesh: Mesh):
+    """with_sharding_constraint on the leading batch dim (block boundaries)."""
+    dp = dp_axes(mesh)
+    spec = P(dp, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,5 @@
+"""Runtime: fault tolerance, preemption, stragglers, elastic scaling."""
+from repro.runtime.fault_tolerance import (TrainSupervisor, SimulatedFailure,
+                                           StragglerMonitor,
+                                           PreemptionHandler,
+                                           elastic_shrink_plan)

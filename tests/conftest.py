@@ -1,0 +1,12 @@
+"""Shared test config. NOTE: no xla_force_host_platform_device_count here —
+smoke tests and benches must see 1 device; multi-device tests spawn
+subprocesses with their own XLA_FLAGS (see test_distributed.py)."""
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

@@ -1,0 +1,122 @@
+"""Attention-mode semantics: windows, softcap, RoPE thetas, GQA shapes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FeatureConfig, rf_attention
+from repro.core.linear_attention import exact_attention
+from repro.models import layers as ll
+from repro.models import attention_block as ab
+
+
+def test_sliding_window_masks_old_tokens():
+    """A window-w query must ignore keys older than w positions."""
+    key = jax.random.PRNGKey(0)
+    B, G, Hg, L, d = 1, 1, 1, 16, 8
+    q = jax.random.normal(key, (B, G, Hg, L, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, G, 1, L, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, G, 1, L, d))
+    out_w = exact_attention(q, k, v, causal=True, window=4)
+    # perturbing keys/values outside the window must not change outputs
+    k2 = k.at[:, :, :, :8].set(99.0)
+    v2 = v.at[:, :, :, :8].set(-99.0)
+    out_w2 = exact_attention(q, k2, v2, causal=True, window=4)
+    np.testing.assert_allclose(np.asarray(out_w[:, :, :, -4:]),
+                               np.asarray(out_w2[:, :, :, -4:]), atol=1e-5)
+    # ...but a full-causal attention DOES change
+    out_full = exact_attention(q, k, v, causal=True)
+    out_full2 = exact_attention(q, k2, v2, causal=True)
+    assert float(jnp.abs(out_full[:, :, :, -4:]
+                         - out_full2[:, :, :, -4:]).max()) > 1e-3
+
+
+def test_causal_no_future_leakage():
+    """Changing future tokens must not change past outputs (all kernels)."""
+    key = jax.random.PRNGKey(1)
+    B, G, Hg, L, d = 1, 1, 2, 12, 8
+    from repro.core import init_feature_params
+    q = jax.random.normal(key, (B, G, Hg, L, d)) * 0.5
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, G, 1, L, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, G, 1, L, d))
+    k2 = k.at[:, :, :, -1].add(3.0)
+    v2 = v.at[:, :, :, -1].add(3.0)
+    for kind in ("exact", "darkformer", "performer"):
+        cfg = FeatureConfig(kind=kind, num_features=32)
+        fp = (init_feature_params(jax.random.PRNGKey(2), cfg, d, 1)
+              if kind != "exact" else None)
+        o1 = rf_attention(q, k, v, fp, cfg)
+        o2 = rf_attention(q, k2, v2, fp, cfg)
+        np.testing.assert_allclose(np.asarray(o1[:, :, :, :-1]),
+                                   np.asarray(o2[:, :, :, :-1]),
+                                   atol=2e-4, err_msg=kind)
+
+
+def test_logit_softcap_bounds_logits():
+    from repro import configs as cfgs
+    from repro.models import lm
+    import dataclasses
+    cfg = cfgs.get_config("recurrentgemma-2b", reduced=True)
+    cfg = dataclasses.replace(cfg, logit_softcap=5.0)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, cfg.vocab)
+    logits, _ = lm.forward_train(params, cfg, {"tokens": toks,
+                                               "labels": toks})
+    assert float(jnp.abs(logits).max()) <= 5.0 + 1e-4
+
+
+def test_gqa_group_broadcast_matches_repeat():
+    """GQA exact attention == repeating each KV head over its group."""
+    key = jax.random.PRNGKey(3)
+    B, G, Hg, L, d = 2, 2, 3, 10, 4
+    q = jax.random.normal(key, (B, G, Hg, L, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, G, 1, L, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, G, 1, L, d))
+    out = rf_attention(q, k, v, None, FeatureConfig(kind="exact"))
+    kb = jnp.broadcast_to(k, (B, G, Hg, L, d))
+    vb = jnp.broadcast_to(v, (B, G, Hg, L, d))
+    out2 = rf_attention(q, kb[:, :, :1] * 0 + kb, vb, None,
+                        FeatureConfig(kind="exact"))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(out2),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("theta", [1e4, 1e6])
+def test_rope_theta_long_range_distinguishes(theta):
+    d = 32
+    x = jnp.ones((1, 2, d))
+    far = ll.apply_rope(x, jnp.array([0, 10_000]), theta)
+    assert float(jnp.abs(far[0, 0] - far[0, 1]).max()) > 1e-3
+
+
+def test_attn_block_projection_shapes():
+    cfg = FeatureConfig(kind="darkformer", num_features=16)
+    p = ab.attn_init(jax.random.PRNGKey(0), 32, 4, 2, 8, cfg,
+                     qk_norm=True)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 6, 32))
+    out = ab.attn_apply(p, x, cfg, n_heads=4, n_kv=2, d_head=8,
+                        qk_norm=True)
+    assert out.shape == (2, 6, 32)
+    assert p["feat"]["w"].shape == (2, 16, 8)      # per-group features
+    assert p["feat"]["m_mat"].shape == (2, 8, 8)
+
+
+def test_w_frozen_m_trainable_contract():
+    """Paper §6 trainability: performer/darkformer W frozen; lfk W trains;
+    darkformer M trains."""
+    from repro.core import init_feature_params
+    key = jax.random.PRNGKey(4)
+    B, G, Hg, L, d = 1, 1, 1, 8, 4
+    q = jax.random.normal(key, (B, G, Hg, L, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, G, 1, L, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, G, 1, L, d))
+    for kind, w_trains in (("performer", False), ("lfk", True),
+                           ("darkformer", False)):
+        cfg = FeatureConfig(kind=kind, num_features=8)
+        fp = init_feature_params(jax.random.PRNGKey(5), cfg, d, 1)
+        g = jax.grad(lambda f: jnp.sum(
+            rf_attention(q, k, v, f, cfg) ** 2))(fp)
+        wg = float(jnp.abs(g["w"]).max())
+        assert (wg > 0) == w_trains, (kind, wg)
+        if kind == "darkformer":
+            assert float(jnp.abs(g["m_mat"]).max()) > 0

@@ -1,0 +1,222 @@
+"""Core PRF math: unbiasedness, IS equivalence, Mahalanobis identities."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FeatureConfig, init_feature_params,
+                        orthogonal_projection, gaussian_projection,
+                        rf_attention, whitening_init)
+from repro.core import variance as vr
+from repro.core import attention as at
+
+
+def test_lemma21_unbiased_mc():
+    """Lemma 2.1: E[phi(q).phi(k)] = exp(q.k), checked by MC."""
+    key = jax.random.PRNGKey(0)
+    d, m = 8, 200_000
+    kq, kk, kw = jax.random.split(key, 3)
+    q = 0.4 * jax.random.normal(kq, (d,))
+    k = 0.4 * jax.random.normal(kk, (d,))
+    om = jax.random.normal(kw, (m, d))
+    est = vr.mc_kernel_estimate(q, k, om)
+    true = float(jnp.exp(q @ k))
+    assert abs(float(est) - true) / true < 0.02
+
+
+def test_eq3_dark_unbiased_mc():
+    """Eq. 3: DARKFormer PRF is unbiased for exp(q^T Sigma k)."""
+    key = jax.random.PRNGKey(1)
+    d, r, m = 8, 8, 200_000
+    kq, kk, km, kw = jax.random.split(key, 4)
+    q = 0.4 * jax.random.normal(kq, (d,))
+    k = 0.4 * jax.random.normal(kk, (d,))
+    m_mat = 0.5 * jax.random.normal(km, (r, d))
+    sigma = m_mat.T @ m_mat
+    w = jax.random.normal(kw, (m, r))
+    omegas = w @ m_mat                     # omega = M^T w ~ N(0, Sigma)
+    est = vr.mc_dark_estimate(q, k, omegas, sigma)
+    true = float(jnp.exp(q @ sigma @ k))
+    assert abs(float(est) - true) / true < 0.02
+
+
+def test_prop41_importance_equivalence():
+    """Prop 4.1: unweighted sampling from N(0,S) == weighted from N(0,I)."""
+    key = jax.random.PRNGKey(2)
+    d, m = 6, 400_000
+    kq, kk, km, kw1, kw2 = jax.random.split(key, 5)
+    q = 0.3 * jax.random.normal(kq, (d,))
+    k = 0.3 * jax.random.normal(kk, (d,))
+    # keep Sigma's spectrum in (0.5, ~1.2): the reweighted-from-isotropic
+    # estimator has finite variance only for Sigma < 2I (the unweighted
+    # DARKFormer estimator has no such restriction — that's the point).
+    a = jax.random.normal(km, (d, d)) * 0.15
+    sigma = a.T @ a + 0.5 * jnp.eye(d)
+    chol = jnp.linalg.cholesky(sigma)
+    om_sigma = jax.random.normal(kw1, (m, d)) @ chol.T
+    est_unweighted = vr.mc_dark_estimate(q, k, om_sigma, sigma)
+    om_iso = jax.random.normal(kw2, (m, d))
+    w_is = vr.importance_weight(om_iso, sigma)
+    zq = jnp.exp(om_iso @ q - 0.5 * q @ sigma @ q)
+    zk = jnp.exp(om_iso @ k - 0.5 * k @ sigma @ k)
+    est_weighted = jnp.mean(w_is * zq * zk)
+    true = float(jnp.exp(q @ sigma @ k))
+    assert abs(float(est_unweighted) - true) / true < 0.05
+    assert abs(float(est_weighted) - true) / true < 0.05
+
+
+@settings(deadline=None, max_examples=20)
+@given(st.integers(0, 10_000), st.integers(2, 12))
+def test_mahalanobis_identity(seed, d):
+    """App. C: q^T Sigma k == (Mq).(Mk) and ||q-k||_Sigma == ||Mq-Mk||."""
+    key = jax.random.PRNGKey(seed)
+    kq, kk, km = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (d,))
+    k = jax.random.normal(kk, (d,))
+    m_mat = jax.random.normal(km, (d, d))
+    sigma = m_mat.T @ m_mat
+    lhs = q @ sigma @ k
+    rhs = (m_mat @ q) @ (m_mat @ k)
+    np.testing.assert_allclose(lhs, rhs, rtol=2e-4)
+    dist_s = (q - k) @ sigma @ (q - k)
+    dist_m = jnp.sum(jnp.square(m_mat @ (q - k)))
+    np.testing.assert_allclose(dist_s, dist_m, rtol=2e-4)
+
+
+def test_whitening_init_whitens():
+    """Prop C.1: M = Lam^{-1/2} makes Cov(Mx) = I."""
+    key = jax.random.PRNGKey(3)
+    d = 8
+    a = jax.random.normal(key, (d, d))
+    lam = a @ a.T / d + 0.1 * jnp.eye(d)
+    m = whitening_init(lam)
+    white = m @ lam @ m.T
+    np.testing.assert_allclose(np.asarray(white), np.eye(d), atol=1e-3)
+
+
+def test_orthogonal_projection_blocks_orthogonal():
+    w = orthogonal_projection(jax.random.PRNGKey(0), 16, 16)
+    # rows within the block are orthogonal (scaled)
+    gram = np.asarray(w @ w.T)
+    off = gram - np.diag(np.diag(gram))
+    assert np.abs(off).max() < 1e-3
+
+
+def test_orthogonal_projection_marginal_norms():
+    """Row norms follow chi(d): mean ~ sqrt(d)."""
+    w = orthogonal_projection(jax.random.PRNGKey(1), 512, 64)
+    norms = np.linalg.norm(np.asarray(w), axis=1)
+    assert abs(norms.mean() - np.sqrt(64)) < 0.5
+
+
+def test_dark_equals_performer_at_identity():
+    key = jax.random.PRNGKey(4)
+    B, G, Hg, L, d = 2, 2, 2, 16, 8
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, G, Hg, L, d)) * 0.5
+    k = jax.random.normal(kk, (B, G, 1, L, d)) * 0.5
+    v = jax.random.normal(kv, (B, G, 1, L, d))
+    cfg_p = FeatureConfig(kind="performer", num_features=64)
+    cfg_d = FeatureConfig(kind="darkformer", num_features=64)
+    fp = init_feature_params(kp, cfg_p, d, n_groups=G)
+    fd = init_feature_params(kp, cfg_d, d, n_groups=G)  # m_mat = I
+    out_p = rf_attention(q, k, v, fp, cfg_p)
+    out_d = rf_attention(q, k, v, fd, cfg_d)
+    np.testing.assert_allclose(np.asarray(out_p), np.asarray(out_d),
+                               atol=1e-6)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 1000))
+def test_attention_rows_are_convex_combination(seed):
+    """PRF attention outputs lie in the convex hull of V rows (positive
+    features -> positive weights summing to 1, up to eps)."""
+    key = jax.random.PRNGKey(seed)
+    B, G, Hg, L, d = 1, 1, 1, 12, 4
+    kq, kk, kp = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, G, Hg, L, d)) * 0.5
+    k = jax.random.normal(kk, (B, G, 1, L, d)) * 0.5
+    v = jnp.ones((B, G, 1, L, d))
+    cfg = FeatureConfig(kind="darkformer", num_features=32)
+    fp = init_feature_params(kp, cfg, d, n_groups=G)
+    out = rf_attention(q, k, v, fp, cfg)
+    np.testing.assert_allclose(np.asarray(out), 1.0, atol=1e-3)
+
+
+def test_stabilizer_invariance():
+    """Attention output must not depend on the stabilizer (it cancels)."""
+    key = jax.random.PRNGKey(5)
+    B, G, Hg, L, d = 2, 1, 2, 16, 8
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, G, Hg, L, d))
+    k = jax.random.normal(kk, (B, G, 1, L, d))
+    v = jax.random.normal(kv, (B, G, 1, L, d))
+    cfg_on = FeatureConfig(kind="darkformer", num_features=64,
+                           stabilize=True, eps=0.0)
+    cfg_off = FeatureConfig(kind="darkformer", num_features=64,
+                            stabilize=False, eps=0.0)
+    fp = init_feature_params(kp, cfg_on, d, n_groups=G)
+    out_on = rf_attention(q, k, v, fp, cfg_on)
+    out_off = rf_attention(q, k, v, fp, cfg_off)
+    np.testing.assert_allclose(np.asarray(out_on), np.asarray(out_off),
+                               atol=2e-4)
+
+
+def test_approx_error_decreases_with_m():
+    key = jax.random.PRNGKey(6)
+    B, G, Hg, L, d = 2, 1, 2, 32, 16
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, G, Hg, L, d)) * 0.5
+    k = jax.random.normal(kk, (B, G, 1, L, d)) * 0.5
+    v = jax.random.normal(kv, (B, G, 1, L, d))
+    exact = rf_attention(q, k, v, None, FeatureConfig(kind="exact"))
+    errs = []
+    for m in (16, 128, 1024):
+        cfg = FeatureConfig(kind="performer", num_features=m)
+        fp = init_feature_params(jax.random.PRNGKey(7), cfg, d, n_groups=G)
+        out = rf_attention(q, k, v, fp, cfg)
+        errs.append(float(jnp.mean(jnp.abs(out - exact))))
+    assert errs[0] > errs[1] > errs[2]
+
+
+def test_decode_matches_prefill_then_full():
+    key = jax.random.PRNGKey(8)
+    B, G, Hg, L, d = 2, 2, 2, 24, 8
+    kq, kk, kv, kp = jax.random.split(key, 4)
+    q = jax.random.normal(kq, (B, G, Hg, L, d)) * 0.5
+    k = jax.random.normal(kk, (B, G, 1, L, d)) * 0.5
+    v = jax.random.normal(kv, (B, G, 1, L, d))
+    cfg = FeatureConfig(kind="darkformer", num_features=64)
+    fp = init_feature_params(kp, cfg, d, n_groups=G)
+    full = rf_attention(q, k, v, fp, cfg)
+    half = L // 2
+    _, st = at.rf_attention_prefill(q[:, :, :, :half], k[:, :, :, :half],
+                                    v[:, :, :, :half], fp, cfg)
+    for t in range(half, L):
+        o, st = at.rf_attention_decode(q[:, :, :, t:t + 1],
+                                       k[:, :, :, t:t + 1],
+                                       v[:, :, :, t:t + 1], st, fp, cfg)
+        np.testing.assert_allclose(np.asarray(o[:, :, :, 0]),
+                                   np.asarray(full[:, :, :, t]), atol=5e-3)
+
+
+def test_exact_decode_bitwise():
+    key = jax.random.PRNGKey(9)
+    B, G, Hg, L, d = 1, 2, 2, 16, 8
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (B, G, Hg, L, d))
+    k = jax.random.normal(kk, (B, G, 1, L, d))
+    v = jax.random.normal(kv, (B, G, 1, L, d))
+    cfg = FeatureConfig(kind="exact")
+    full = rf_attention(q, k, v, None, cfg)
+    half = L // 2
+    _, st = at.rf_attention_prefill(q[:, :, :, :half], k[:, :, :, :half],
+                                    v[:, :, :, :half], None, cfg,
+                                    max_len=L)
+    for t in range(half, L):
+        o, st = at.rf_attention_decode(q[:, :, :, t:t + 1],
+                                       k[:, :, :, t:t + 1],
+                                       v[:, :, :, t:t + 1], st, None, cfg)
+        np.testing.assert_allclose(np.asarray(o[:, :, :, 0]),
+                                   np.asarray(full[:, :, :, t]), atol=1e-5)

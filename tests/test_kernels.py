@@ -1,0 +1,206 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + gradients."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.linear_attn_scan import linear_attention_causal_fwd
+from repro.kernels.prf_featmap import prf_featmap_fwd
+
+
+@pytest.mark.parametrize("n,l,m,dv,chunk", [
+    (1, 8, 4, 4, 4),
+    (4, 96, 32, 16, 32),
+    (2, 128, 64, 32, 64),
+    (3, 100, 16, 8, 32),          # non-divisible L -> padding path
+    (2, 64, 48, 24, 64),          # chunk == L
+])
+def test_linear_attn_kernel_shapes(n, l, m, dv, chunk):
+    key = jax.random.PRNGKey(l * 7 + m)
+    kq, kk, kv = jax.random.split(key, 3)
+    qf = jax.random.uniform(kq, (n, l, m))
+    kf = jax.random.uniform(kk, (n, l, m))
+    v = jax.random.normal(kv, (n, l, dv))
+    out = linear_attention_causal_fwd(qf, kf, v, chunk=chunk,
+                                      interpret=True)
+    expect = ref.linear_attention_causal_ref(qf, kf, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_linear_attn_kernel_dtypes(dtype):
+    key = jax.random.PRNGKey(0)
+    kq, kk, kv = jax.random.split(key, 3)
+    qf = jax.random.uniform(kq, (2, 64, 16)).astype(dtype)
+    kf = jax.random.uniform(kk, (2, 64, 16)).astype(dtype)
+    v = jax.random.normal(kv, (2, 64, 8)).astype(dtype)
+    out = linear_attention_causal_fwd(qf, kf, v, chunk=32, interpret=True)
+    expect = ref.linear_attention_causal_ref(qf, kf, v)
+    assert out.dtype == dtype
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32), atol=tol)
+
+
+def test_linear_attn_gradients_match_oracle():
+    key = jax.random.PRNGKey(1)
+    kq, kk, kv = jax.random.split(key, 3)
+    qf = jax.random.uniform(kq, (2, 48, 16))
+    kf = jax.random.uniform(kk, (2, 48, 16))
+    v = jax.random.normal(kv, (2, 48, 8))
+
+    def l_kernel(q, k, v_):
+        return jnp.sum(ops.linear_attention_causal(q, k, v_, chunk=16) ** 2)
+
+    def l_ref(q, k, v_):
+        return jnp.sum(ref.linear_attention_causal_ref(q, k, v_) ** 2)
+
+    g1 = jax.grad(l_kernel, argnums=(0, 1, 2))(qf, kf, v)
+    g2 = jax.grad(l_ref, argnums=(0, 1, 2))(qf, kf, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
+
+
+@pytest.mark.parametrize("n,d,r,m,blk", [
+    (16, 8, 4, 16, 8),
+    (70, 16, 8, 64, 32),          # padding path
+    (128, 32, 32, 128, 64),
+])
+def test_featmap_kernel_dark(n, d, r, m, blk):
+    key = jax.random.PRNGKey(n + d)
+    kx, km, kw = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (n, d))
+    m_mat = 0.3 * jax.random.normal(km, (r, d))
+    w = jax.random.normal(kw, (m, r))
+    out = prf_featmap_fwd(x, m_mat, w, jnp.float32(0.7), block_n=blk,
+                          interpret=True)
+    expect = ref.prf_featmap_ref(x, m_mat, w, jnp.float32(0.7))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_featmap_kernel_iso():
+    key = jax.random.PRNGKey(3)
+    kx, kw = jax.random.split(key)
+    x = jax.random.normal(kx, (40, 8))
+    w = jax.random.normal(kw, (32, 8))
+    out = prf_featmap_fwd(x, None, w, jnp.float32(0.0), block_n=16,
+                          interpret=True)
+    expect = ref.prf_featmap_ref(x, None, w, jnp.float32(0.0))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=1e-6)
+
+
+def test_featmap_gradients():
+    key = jax.random.PRNGKey(4)
+    kx, km, kw = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (20, 8))
+    m_mat = 0.3 * jax.random.normal(km, (4, 8))
+    w = jax.random.normal(kw, (16, 4))
+
+    def lk(m_):
+        return jnp.sum(ops.prf_featmap(x, m_, w, 0.5, block_n=8) ** 2)
+
+    def lr(m_):
+        return jnp.sum(ref.prf_featmap_ref(x, m_, w,
+                                           jnp.float32(0.5)) ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(lk)(m_mat)),
+                               np.asarray(jax.grad(lr)(m_mat)), atol=1e-4)
+
+
+def test_kernel_jit_and_vmap_compose():
+    qf = jax.random.uniform(jax.random.PRNGKey(0), (2, 3, 32, 8))
+    kf = jax.random.uniform(jax.random.PRNGKey(1), (2, 3, 32, 8))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 32, 4))
+    out = jax.jit(lambda a, b, c: ops.linear_attention_causal(
+        a, b, c, chunk=16))(qf, kf, v)
+    expect = ref.linear_attention_causal_ref(
+        qf.reshape(6, 32, 8), kf.reshape(6, 32, 8), v.reshape(6, 32, 4)
+    ).reshape(2, 3, 32, 4)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=2e-5)
+
+
+def test_rglru_ref_matches_manual_loop():
+    key = jax.random.PRNGKey(5)
+    n, l, d = 2, 10, 4
+    x = jax.random.normal(key, (n, l, d))
+    a = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 1),
+                                         (n, l, d)))
+    g = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 2),
+                                         (n, l, d)))
+    h0 = jnp.zeros((n, d))
+    hs, hl = ref.rglru_ref(x, a, g, h0)
+    h = np.zeros((n, d), np.float32)
+    for t in range(l):
+        at = np.asarray(a[:, t])
+        it = np.sqrt(np.clip(1 - at * at, 0, None)) * np.asarray(
+            g[:, t]) * np.asarray(x[:, t])
+        h = at * h + it
+        np.testing.assert_allclose(np.asarray(hs[:, t]), h, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(hl), h, atol=1e-5)
+
+
+def test_wkv6_ref_matches_manual_loop():
+    key = jax.random.PRNGKey(6)
+    n, l, dh = 2, 6, 4
+    r = jax.random.normal(key, (n, l, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (n, l, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, l, dh))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 3),
+                                         (n, l, dh)))
+    u = 0.3 * jnp.ones((dh,))
+    s0 = jnp.zeros((n, dh, dh))
+    o, s_last = ref.wkv6_ref(r, k, v, w, u, s0)
+    s = np.zeros((n, dh, dh), np.float32)
+    for t in range(l):
+        kv = np.asarray(k[:, t])[:, :, None] * np.asarray(v[:, t])[:, None]
+        ot = np.einsum("nd,nde->ne", np.asarray(r[:, t]),
+                       s + np.asarray(u)[None, :, None] * kv)
+        np.testing.assert_allclose(np.asarray(o[:, t]), ot, atol=1e-5)
+        s = np.asarray(w[:, t])[:, :, None] * s + kv
+    np.testing.assert_allclose(np.asarray(s_last), s, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,l,dh,chunk", [
+    (2, 16, 4, 8),
+    (3, 50, 8, 16),          # padding path
+    (1, 64, 16, 64),
+])
+def test_wkv6_kernel_vs_ref(n, l, dh, chunk):
+    from repro.kernels.wkv6_scan import wkv6_fwd
+    key = jax.random.PRNGKey(l + dh)
+    r = jax.random.normal(key, (n, l, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (n, l, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, l, dh))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 3),
+                                         (n, l, dh)) + 2.0)
+    u = 0.3 * jnp.ones((dh,))
+    out = wkv6_fwd(r, k, v, w, u, chunk=chunk, interpret=True)
+    expect, _ = ref.wkv6_ref(r, k, v, w, u, jnp.zeros((n, dh, dh)))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=3e-5)
+
+
+def test_wkv6_ops_gradients():
+    key = jax.random.PRNGKey(9)
+    n, l, dh = 2, 24, 4
+    r = jax.random.normal(key, (n, l, dh))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (n, l, dh))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (n, l, dh))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.fold_in(key, 3),
+                                         (n, l, dh)) + 2.0)
+    u = 0.3 * jnp.ones((dh,))
+
+    def lk(r_):
+        return jnp.sum(ops.wkv6(r_, k, v, w, u, chunk=8) ** 2)
+
+    def lr(r_):
+        o, _ = ref.wkv6_ref(r_, k, v, w, u, jnp.zeros((n, dh, dh)))
+        return jnp.sum(o ** 2)
+
+    np.testing.assert_allclose(np.asarray(jax.grad(lk)(r)),
+                               np.asarray(jax.grad(lr)(r)), atol=2e-4)

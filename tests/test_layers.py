@@ -1,0 +1,102 @@
+"""Layer substrate: norms, rope, mlp, MoE."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as ll
+
+
+def test_rmsnorm_unit_rms():
+    x = 5.0 * jax.random.normal(jax.random.PRNGKey(0), (4, 32))
+    p = ll.rmsnorm_init(32)
+    y = ll.rmsnorm(p, x)
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)
+
+
+def test_layernorm_moments():
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 32)) * 3 + 2
+    p = ll.layernorm_init(32)
+    y = ll.layernorm(p, x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(y, -1)), 0.0, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.std(y, -1)), 1.0, atol=1e-2)
+
+
+@settings(deadline=None, max_examples=10)
+@given(st.integers(0, 1000), st.integers(1, 32))
+def test_rope_preserves_norm_and_relative_angle(seed, shift):
+    """RoPE is orthogonal per position, and q.k depends only on the
+    relative position (shift both -> same inner product)."""
+    key = jax.random.PRNGKey(seed)
+    d = 16
+    q = jax.random.normal(key, (1, 8, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 8, d))
+    pos = jnp.arange(8)
+    q1 = ll.apply_rope(q, pos)
+    np.testing.assert_allclose(np.asarray(jnp.linalg.norm(q1, axis=-1)),
+                               np.asarray(jnp.linalg.norm(q, axis=-1)),
+                               rtol=1e-4)
+    k1 = ll.apply_rope(k, pos)
+    q2 = ll.apply_rope(q, pos + shift)
+    k2 = ll.apply_rope(k, pos + shift)
+    ip1 = jnp.einsum("bld,bld->bl", q1, k1)
+    ip2 = jnp.einsum("bld,bld->bl", q2, k2)
+    np.testing.assert_allclose(np.asarray(ip1), np.asarray(ip2), atol=1e-3)
+
+
+@pytest.mark.parametrize("kind", ["swiglu", "geglu", "gelu"])
+def test_mlp_kinds(kind):
+    p = ll.mlp_init(jax.random.PRNGKey(0), 16, 32, kind)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, 16))
+    y = ll.mlp_apply(p, x, kind)
+    assert y.shape == x.shape
+    assert not bool(jnp.isnan(y).any())
+
+
+def test_moe_matches_dense_when_capacity_ample():
+    cfg = ll.MoEConfig(num_experts=8, top_k=2, d_ff=16,
+                       capacity_factor=4.0)
+    p = ll.moe_init(jax.random.PRNGKey(0), 12, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 12))
+    out, aux = ll.moe_apply(p, x, cfg)
+    logits = x @ p["router"]
+    gv, idx = jax.lax.top_k(jax.nn.softmax(logits, -1), 2)
+    gv = gv / gv.sum(-1, keepdims=True)
+
+    def per_tok(xt, it, gt):
+        o = jnp.zeros(12)
+        for kk in range(2):
+            e = it[kk]
+            h = jax.nn.silu(xt @ p["w_gate"][e]) * (xt @ p["w_up"][e])
+            o = o + gt[kk] * (h @ p["w_out"][e])
+        return o
+
+    expect = jax.vmap(jax.vmap(per_tok))(x, idx, gv)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5)
+    assert float(aux) > 0
+
+
+def test_moe_capacity_drops_tokens():
+    """With tiny capacity, some tokens must be dropped (output ~ 0 for
+    them), and outputs stay finite."""
+    cfg = ll.MoEConfig(num_experts=4, top_k=1, d_ff=8,
+                       capacity_factor=0.25)
+    p = ll.moe_init(jax.random.PRNGKey(0), 8, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8))
+    out, _ = ll.moe_apply(p, x, cfg)
+    assert not bool(jnp.isnan(out).any())
+    row_norms = jnp.linalg.norm(out[0], axis=-1)
+    assert float(jnp.min(row_norms)) < 1e-6      # dropped tokens exist
+
+
+def test_moe_grads_flow_to_router_and_experts():
+    cfg = ll.MoEConfig(num_experts=4, top_k=2, d_ff=8)
+    p = ll.moe_init(jax.random.PRNGKey(0), 8, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))
+    g = jax.grad(lambda pp: ll.moe_apply(pp, x, cfg)[0].sum()
+                 + ll.moe_apply(pp, x, cfg)[1])(p)
+    for k in ("router", "w_gate", "w_up", "w_out"):
+        assert float(jnp.abs(g[k]).max()) > 0

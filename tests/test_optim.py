@@ -1,0 +1,78 @@
+"""AdamW, schedules, clipping."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import (AdamWConfig, adamw_init, adamw_update, global_norm,
+                         clip_by_global_norm, cosine_warmup, linear_warmup)
+
+
+def test_adamw_converges_quadratic():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0, grad_clip=1e9)
+    target = jnp.array([1.0, -2.0, 3.0])
+    params = {"w": jnp.zeros(3)}
+    state = adamw_init(params, cfg)
+    for step in range(300):
+        g = {"w": 2 * (params["w"] - target)}
+        params, state, _ = adamw_update(params, g, state, cfg, cfg.lr)
+    np.testing.assert_allclose(np.asarray(params["w"]), np.asarray(target),
+                               atol=1e-2)
+
+
+def test_weight_decay_shrinks():
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.5)
+    params = {"w": jnp.ones(4) * 10}
+    state = adamw_init(params, cfg)
+    zero_g = {"w": jnp.zeros(4)}
+    p1, _, _ = adamw_update(params, zero_g, state, cfg, cfg.lr)
+    assert float(jnp.abs(p1["w"]).max()) < 10.0
+
+
+def test_grad_clip():
+    tree = {"a": jnp.ones(100) * 10}
+    clipped, norm = clip_by_global_norm(tree, 1.0)
+    assert abs(float(global_norm(clipped)) - 1.0) < 1e-4
+    assert float(norm) == pytest.approx(100.0, rel=1e-4)
+
+
+def test_bf16_params_f32_moments():
+    cfg = AdamWConfig(lr=0.01)
+    params = {"w": jnp.ones(4, jnp.bfloat16)}
+    state = adamw_init(params, cfg)
+    assert state["mu"]["w"].dtype == jnp.float32
+    g = {"w": jnp.ones(4, jnp.bfloat16) * 0.5}
+    p1, s1, m = adamw_update(params, g, state, cfg, 0.01)
+    assert p1["w"].dtype == jnp.bfloat16
+    assert s1["nu"]["w"].dtype == jnp.float32
+
+
+def test_factored_second_moment_close_to_full():
+    cfg_full = AdamWConfig(lr=0.05, factored_second_moment=False,
+                           weight_decay=0.0)
+    cfg_fact = AdamWConfig(lr=0.05, factored_second_moment=True,
+                           weight_decay=0.0)
+    key = jax.random.PRNGKey(0)
+    w0 = jax.random.normal(key, (8, 8))
+    target = jax.random.normal(jax.random.fold_in(key, 1), (8, 8))
+    outs = []
+    for cfg in (cfg_full, cfg_fact):
+        params = {"w": w0}
+        state = adamw_init(params, cfg)
+        for step in range(200):
+            g = {"w": params["w"] - target}
+            params, state, _ = adamw_update(params, g, state, cfg, cfg.lr)
+        outs.append(params["w"])
+    err = float(jnp.abs(outs[0] - target).max())
+    err_f = float(jnp.abs(outs[1] - target).max())
+    assert err < 0.05 and err_f < 0.15
+
+
+def test_schedules():
+    s = cosine_warmup(1.0, 10, 100)
+    assert float(s(0)) < 0.2
+    assert float(s(10)) == pytest.approx(1.0, abs=0.05)
+    assert float(s(99)) < 0.2
+    lw = linear_warmup(2.0, 4)
+    assert float(lw(0)) == pytest.approx(0.5)
+    assert float(lw(100)) == pytest.approx(2.0)

@@ -1,0 +1,73 @@
+"""RG-LRU and RWKV-6 mixers: streaming == full-sequence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import recurrent as rec
+
+
+def test_rglru_streaming_equals_full():
+    key = jax.random.PRNGKey(0)
+    B, L, dm, dr = 2, 20, 16, 24
+    params = rec.rglru_init(key, dm, dr)
+    u = jax.random.normal(jax.random.PRNGKey(1), (B, L, dm)) * 0.5
+    full, _ = rec.rglru_apply(params, u, None)
+    o1, st = rec.rglru_apply(params, u[:, :7], None)
+    outs = [o1]
+    for t in range(7, L):
+        o, st = rec.rglru_apply(params, u[:, t:t + 1], st)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stream),
+                               atol=1e-5)
+
+
+def test_rglru_decay_bounded():
+    """a_t in (0,1) -> hidden state bounded for bounded input."""
+    key = jax.random.PRNGKey(2)
+    params = rec.rglru_init(key, 8, 8)
+    u = jnp.ones((1, 500, 8))
+    out, st = rec.rglru_apply(params, u, None)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert float(jnp.abs(st.h).max()) < 1e3
+
+
+def test_rwkv6_streaming_equals_full():
+    key = jax.random.PRNGKey(3)
+    B, L, d, H = 2, 16, 16, 4
+    params = rec.rwkv6_init(key, d, H)
+    x = jax.random.normal(jax.random.PRNGKey(4), (B, L, d)) * 0.5
+    full, _ = rec.rwkv6_apply(params, x, H, None)
+    o1, st = rec.rwkv6_apply(params, x[:, :5], H, None)
+    outs = [o1]
+    for t in range(5, L):
+        o, st = rec.rwkv6_apply(params, x[:, t:t + 1], H, st)
+        outs.append(o)
+    stream = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stream),
+                               atol=2e-4)
+
+
+def test_rwkv6_channel_mix_token_shift():
+    key = jax.random.PRNGKey(5)
+    params = rec.rwkv6_channel_mix_init(key, 8, 16)
+    x = jax.random.normal(jax.random.PRNGKey(6), (1, 10, 8))
+    full, _ = rec.rwkv6_channel_mix(params, x, None)
+    o1, last = rec.rwkv6_channel_mix(params, x[:, :4], None)
+    o2, _ = rec.rwkv6_channel_mix(params, x[:, 4:], last)
+    stream = jnp.concatenate([o1, o2], axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(stream),
+                               atol=1e-5)
+
+
+def test_causal_conv_prefix():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (1, 12, 4))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (4, 4))
+    full, _ = rec._causal_conv(x, w, None)
+    a, tail = rec._causal_conv(x[:, :6], w, None)
+    b, _ = rec._causal_conv(x[:, 6:], w, tail)
+    np.testing.assert_allclose(np.asarray(full),
+                               np.asarray(jnp.concatenate([a, b], 1)),
+                               atol=1e-5)

@@ -1,0 +1,121 @@
+"""Lemma 3.1 / Theorem 3.2: variance formulas and optimality."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import variance as vr
+
+
+def _random_spd(key, d, lmax=0.45):
+    evals = jax.random.uniform(key, (d,), minval=0.02, maxval=lmax)
+    q, _ = jnp.linalg.qr(jax.random.normal(jax.random.fold_in(key, 1),
+                                           (d, d)))
+    return (q * evals) @ q.T, evals, q
+
+
+def test_variance_iso_closed_form_vs_mc():
+    key = jax.random.PRNGKey(0)
+    d = 6
+    q = 0.3 * jax.random.normal(key, (d,))
+    k = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    om = jax.random.normal(jax.random.fold_in(key, 2), (500_000, d))
+    z = jnp.exp(om @ (q + k) - 0.5 * (q @ q + k @ k))
+    closed = float(vr.estimator_variance_iso(q, k))
+    mc = float(jnp.var(z))
+    assert abs(closed - mc) / closed < 0.1
+
+
+def test_variance_is_closed_form_vs_mc():
+    key = jax.random.PRNGKey(1)
+    d = 5
+    q = 0.3 * jax.random.normal(key, (d,))
+    k = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    sigma, _, _ = _random_spd(jax.random.fold_in(key, 2), d)
+    sigma = sigma + 0.7 * jnp.eye(d)       # ensure A = I - S^-1/2 > 0
+    chol = jnp.linalg.cholesky(sigma)
+    om = jax.random.normal(jax.random.fold_in(key, 3), (500_000, d)) @ chol.T
+    w = vr.importance_weight(om, jnp.eye(d)) / vr.importance_weight(
+        om, sigma) * 0 + 1.0 / vr.importance_weight(om, sigma)
+    # Z = (p_I / psi)(om) * prf terms; p_I/psi = 1 / w_sigma
+    z = w * jnp.exp(om @ (q + k) - 0.5 * (q @ q + k @ k))
+    closed = float(vr.estimator_variance_is(q, k, sigma))
+    mc = float(jnp.var(z))
+    assert abs(closed - mc) / max(closed, 1e-9) < 0.15
+
+
+def test_theorem32_sigma_star_formula():
+    """Sigma* = (I+2L)(I-2L)^{-1}: shares eigenbasis, matches eigenvalues."""
+    key = jax.random.PRNGKey(2)
+    d = 6
+    lam, evals, evecs = _random_spd(key, d)
+    star = vr.optimal_sigma_star(lam)
+    expect = (evecs * ((1 + 2 * evals) / (1 - 2 * evals))) @ evecs.T
+    np.testing.assert_allclose(np.asarray(star), np.asarray(expect),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_theorem32_iso_iff_iso():
+    d = 5
+    star_iso = vr.optimal_sigma_star(0.2 * jnp.eye(d))
+    np.testing.assert_allclose(np.asarray(star_iso),
+                               np.asarray(star_iso[0, 0] * jnp.eye(d)),
+                               atol=1e-5)
+    lam, _, _ = _random_spd(jax.random.PRNGKey(3), d)
+    star = vr.optimal_sigma_star(lam)
+    off = np.asarray(star - jnp.diag(jnp.diag(star)))
+    assert np.abs(off).max() > 1e-3 or np.std(np.diag(star)) > 1e-3
+
+
+def test_theorem32_optimality():
+    """E[Var] under Sigma* < under I, and < under random proposals
+    (Lemma 3.1 says Sigma* is the global optimum among proposals)."""
+    key = jax.random.PRNGKey(4)
+    d = 6
+    lam, _, _ = _random_spd(key, d, lmax=0.4)
+    star = vr.optimal_sigma_star(lam)
+    v_iso = float(vr.expected_variance(jax.random.PRNGKey(5), lam, None))
+    v_star = float(vr.expected_variance(jax.random.PRNGKey(5), lam, star))
+    assert v_star < v_iso
+    for i in range(3):
+        pert, _, _ = _random_spd(jax.random.PRNGKey(10 + i), d)
+        prop = star + 0.5 * pert + 0.6 * jnp.eye(d)
+        v_p = float(vr.expected_variance(jax.random.PRNGKey(5), lam, prop))
+        assert v_star <= v_p * 1.001
+
+
+def test_b_gaussian_closed_form_vs_mc():
+    key = jax.random.PRNGKey(6)
+    d = 4
+    lam, _, _ = _random_spd(key, d)
+    om = 0.5 * jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    chol = jnp.linalg.cholesky(lam)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (400_000, d)) @ chol.T
+    mc = float(jnp.mean(jnp.exp(2 * x @ om - jnp.sum(x * x, -1))))
+    closed = float(vr.b_gaussian(om, lam))
+    assert abs(closed - mc) / closed < 0.05
+
+
+@settings(deadline=None, max_examples=15)
+@given(st.integers(0, 10_000))
+def test_variance_nonnegative_and_star_bounded(seed):
+    key = jax.random.PRNGKey(seed)
+    d = 4
+    lam, _, _ = _random_spd(key, d)
+    star = vr.optimal_sigma_star(lam)
+    q = 0.3 * jax.random.normal(jax.random.fold_in(key, 1), (d,))
+    k = 0.3 * jax.random.normal(jax.random.fold_in(key, 2), (d,))
+    v_iso = float(vr.estimator_variance_iso(q, k))
+    v_is = float(vr.estimator_variance_is(q, k, star))
+    assert v_iso >= -1e-6
+    assert v_is >= -1e-6
+
+
+def test_anisotropy_score():
+    from repro.core.calibration import anisotropy_score
+    key = jax.random.PRNGKey(7)
+    iso = jax.random.normal(key, (4000, 16))
+    aniso = iso * jnp.linspace(0.05, 3.0, 16)[None, :]
+    assert float(anisotropy_score(iso)) < 0.1
+    assert float(anisotropy_score(aniso)) > 0.25
