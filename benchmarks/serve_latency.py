@@ -1,18 +1,31 @@
-"""Serving latency vs context length: PRF O(1)-state decode wall-clock is
-flat in context, exact-attention KV decode grows. (The at-scale version is
-the decode_32k == long_500k equality in the §Roofline table; this is the
-measured-on-CPU reduced-model counterpart.)"""
+"""Serving benchmarks: decode-cost scaling + continuous-batching traffic.
+
+Part 1 (context scaling): PRF O(1)-state decode wall-clock is flat in
+context, exact-attention KV decode grows. (The at-scale version is the
+decode_32k == long_500k equality in the §Roofline table; this is the
+measured-on-CPU reduced-model counterpart.)
+
+Part 2 (engine throughput): open-loop Poisson traffic through
+``repro.serving.ServingEngine`` — requests with heterogeneous prompt and
+generation lengths arrive at a fixed rate and get multiplexed over a
+small slot pool. Reports tokens/s, p50/p99 per-token latency (TPOT),
+p50/p99 TTFT and mean slot occupancy, for the PRF kernel vs the exact
+paged-KV fallback.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro import configs as cfgs
 from repro.models import lm
+from repro.serving import ServingEngine
+from repro.serving.request import synthetic_requests
 from benchmarks.common import save_result, time_call
 
 
-def run(fast: bool = True) -> dict:
+def run_context_scaling(fast: bool = True) -> dict:
     cfg_lin = cfgs.get_config("smollm-135m", reduced=True)
     cfg_ex = cfgs.darkify(cfg_lin, "exact")
     params = lm.init_params(jax.random.PRNGKey(0), cfg_lin)
@@ -33,9 +46,57 @@ def run(fast: bool = True) -> dict:
               flush=True)
     flat = rows[-1]["us_linear"] / max(rows[0]["us_linear"], 1e-9)
     grow = rows[-1]["us_exact"] / max(rows[0]["us_exact"], 1e-9)
-    out = {"rows": rows, "linear_growth": flat, "exact_growth": grow,
-           "us_per_call": rows[-1]["us_linear"],
-           "derived": grow / max(flat, 1e-9)}
+    return {"rows": rows, "linear_growth": flat, "exact_growth": grow,
+            "us_per_call": rows[-1]["us_linear"],
+            "derived": grow / max(flat, 1e-9)}
+
+
+def run_engine_traffic(fast: bool = True, rate: float = 4.0,
+                       slots: int = 4) -> dict:
+    """Poisson open-loop traffic through the continuous-batching engine."""
+    n_req = 8 if fast else 32
+    out = {}
+    for kind in ("darkformer", "exact"):
+        cfg = cfgs.get_config("smollm-135m", reduced=True)
+        cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        eng = ServingEngine(params, cfg, max_slots=slots, max_len=96,
+                            prefill_bucket=8)
+        for r in synthetic_requests(n_req, cfg.vocab, seed=1, rate=rate,
+                                    prompt_range=(8, 48),
+                                    gen_range=(8, 24)):
+            eng.submit(r)
+        results = eng.run(realtime=False)
+        st = eng.stats
+        tpots = np.array([t for r in results for t in r.tpots])
+        ttfts = np.array([r.ttft for r in results if r.token_times])
+        span = (max(r.finish_time for r in results)
+                - min(r.arrival_time for r in results))
+        row = {
+            "requests": n_req, "rate": rate, "slots": slots,
+            "tokens": st["emitted_tokens"],
+            "tok_per_s": st["emitted_tokens"] / max(span, 1e-9),
+            "tpot_p50_ms": float(np.percentile(tpots, 50) * 1e3)
+            if tpots.size else None,
+            "tpot_p99_ms": float(np.percentile(tpots, 99) * 1e3)
+            if tpots.size else None,
+            "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+            "ttft_p99_ms": float(np.percentile(ttfts, 99) * 1e3),
+            "mean_occupancy": st["mean_occupancy"],
+            "decode_steps": st["decode_steps"],
+        }
+        out[kind] = row
+        print(f"  engine[{kind}]: {row['tok_per_s']:.1f} tok/s, "
+              f"tpot p50={row['tpot_p50_ms']:.1f}ms "
+              f"p99={row['tpot_p99_ms']:.1f}ms, "
+              f"occupancy={row['mean_occupancy'] * 100:.0f}%", flush=True)
+    return out
+
+
+def run(fast: bool = True) -> dict:
+    scaling = run_context_scaling(fast)
+    traffic = run_engine_traffic(fast)
+    out = {**scaling, "traffic": traffic}
     save_result("serve_latency", out)
     return out
 
@@ -44,3 +105,6 @@ if __name__ == "__main__":
     r = run()
     print("linear growth:", round(r["linear_growth"], 2),
           " exact growth:", round(r["exact_growth"], 2))
+    for kind, row in r["traffic"].items():
+        print(f"{kind}: {row['tok_per_s']:.1f} tok/s "
+              f"@ occupancy {row['mean_occupancy'] * 100:.0f}%")

@@ -1,0 +1,9 @@
+#!/usr/bin/env bash
+# Tier-1 verify, reproducible from a fresh checkout:
+#   pip install -r requirements.txt -r requirements-dev.txt
+#   scripts/check.sh
+# Mirrors ROADMAP.md's verify line exactly; any extra args are passed
+# through to pytest (e.g. scripts/check.sh -k serving).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"

@@ -120,12 +120,17 @@ def rf_attention(q: Array, k: Array, v: Array, fparams: Optional[dict],
 class AttnServeState(NamedTuple):
     """Serving state.
 
-    exact  — KV cache (B, G, Lmax, d) + write index.
-    linear — running (S, z) plus the running k-stabilizer ``c``.
+    exact  — KV cache (B, G, Lmax, d) + write index. ``length`` is ()
+             int32 when the whole batch decodes in lock-step, or (B,)
+             int32 for per-slot lengths (continuous batching: each slot
+             owns one page of the cache and writes at its own index).
+    linear — running (S, z) plus the running k-stabilizer ``c``. All
+             leaves carry a leading batch axis, so the state doubles as
+             a slot pool: slot i lives at batch row i of every leaf.
     """
     kv_k: Optional[Array] = None
     kv_v: Optional[Array] = None
-    length: Optional[Array] = None          # () int32
+    length: Optional[Array] = None          # () or (B,) int32
     s: Optional[Array] = None               # (B, G, Hg, m, dv) f32
     z: Optional[Array] = None               # (B, G, Hg, m)     f32
     c: Optional[Array] = None               # (B, G, 1, 1, 1)   f32
@@ -170,30 +175,61 @@ def init_linear_serve_state(b, g, hg, m, dv) -> AttnServeState:
         c=jnp.full((b, g, 1, 1, 1), -1e30, jnp.float32))
 
 
-def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
-                        cfg: fm.FeatureConfig, *,
-                        window: Optional[int] = None):
-    """One-token decode. q: (B,G,Hg,1,d); k,v: (B,G,1,1,d)."""
-    b, g, hg, _, _ = q.shape
-    dv = v.shape[-1]
-    if cfg.kind == "exact":
-        qs, ks = _scale_qk(q, k)
-        idx = state.length
+def _exact_decode(qs, ks, v, state: AttnServeState,
+                  window: Optional[int], out_dtype):
+    """Exact-attention decode step with a () or (B,) write index.
+
+    With a (B,) ``length`` every batch row (= serving slot) appends its
+    key/value at its own position and masks its own valid prefix — the
+    per-slot page write of the continuous-batching engine.
+    """
+    idx = state.length
+    if idx.ndim == 0:
         kc = jax.lax.dynamic_update_slice_in_dim(
             state.kv_k, ks[:, :, 0], idx, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(
             state.kv_v, v[:, :, 0], idx, axis=2)
-        lmax = kc.shape[2]
-        pos = jnp.arange(lmax)
+    else:
+        write = jax.vmap(
+            lambda cache, new, i: jax.lax.dynamic_update_slice_in_dim(
+                cache, new, i, axis=1))
+        kc = write(state.kv_k, ks[:, :, 0], idx)
+        vc = write(state.kv_v, v[:, :, 0], idx)
+    lmax = kc.shape[2]
+    pos = jnp.arange(lmax)
+    if idx.ndim == 0:
         valid = pos <= idx
         if window is not None:
             valid &= pos > idx - window
-        logits = jnp.einsum("bghqd,bgkd->bghqk", qs, kc).astype(jnp.float32)
-        logits = jnp.where(valid[None, None, None, None, :], logits,
-                           jnp.finfo(jnp.float32).min)
-        probs = jax.nn.softmax(logits, axis=-1)
-        out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(v.dtype)
-        return out, state._replace(kv_k=kc, kv_v=vc, length=idx + 1)
+        vmask = valid[None, None, None, None, :]
+    else:
+        valid = pos[None, :] <= idx[:, None]            # (B, lmax)
+        if window is not None:
+            valid &= pos[None, :] > (idx[:, None] - window)
+        vmask = valid[:, None, None, None, :]
+    logits = jnp.einsum("bghqd,bgkd->bghqk", qs, kc).astype(jnp.float32)
+    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(out_dtype)
+    return out, state._replace(kv_k=kc, kv_v=vc, length=idx + 1)
+
+
+def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
+                        cfg: fm.FeatureConfig, *,
+                        window: Optional[int] = None,
+                        use_kernel: bool = False):
+    """One-token decode. q: (B,G,Hg,1,d); k,v: (B,G,1,1,d).
+
+    ``state.length`` (exact) may be () for lock-step batches or (B,) for
+    per-slot decode; the linear state is per-slot by construction. With
+    ``use_kernel`` the linear (S, z) update + readout runs through the
+    Pallas ``prf_decode_step`` kernel instead of the jnp einsums.
+    """
+    b, g, hg, _, _ = q.shape
+    dv = v.shape[-1]
+    if cfg.kind == "exact":
+        qs, ks = _scale_qk(q, k)
+        return _exact_decode(qs, ks, v, state, window, v.dtype)
 
     qs, ks = _scale_qk(q, k)
     inv_sqrt_m = cfg.num_features ** -0.5
@@ -209,10 +245,17 @@ def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
     kf = jnp.exp(kraw - c_new) * inv_sqrt_m        # (B,G,1,1,m)
     kfb = jnp.broadcast_to(kf[:, :, :, 0], (b, g, hg, cfg.num_features))
     vv = jnp.broadcast_to(v[:, :, :, 0], (b, g, hg, dv))
+    qf1 = qf[..., 0, :]                            # (B,G,Hg,m)
+    if use_kernel:
+        from repro.kernels import ops as kops
+        out, s, z = kops.linear_attention_decode_step(
+            qf1, kfb, vv.astype(jnp.float32), state.s, state.z,
+            rescale[..., 0, 0], eps=cfg.eps)
+        return (out.astype(v.dtype)[..., None, :],
+                state._replace(s=s, z=z, c=c_new))
     s = state.s * rescale + (
         kfb[..., :, None] * vv[..., None, :].astype(jnp.float32))
     z = state.z * rescale[..., 0] + kfb
-    qf1 = qf[..., 0, :]                            # (B,G,Hg,m)
     num = jnp.einsum("bghm,bghmd->bghd", qf1, s)
     den = jnp.einsum("bghm,bghm->bgh", qf1, z)
     out = (num / (den[..., None] + cfg.eps)).astype(v.dtype)

@@ -3,9 +3,12 @@
 Kernels (each: <name>.py pallas_call + BlockSpec, oracle in ref.py, jit'd
 differentiable wrapper in ops.py):
 
-  * linear_attn_scan — chunked causal linear attention (the O(Lmd) scan
+  * linear_attn_scan  — chunked causal linear attention (the O(Lmd) scan
     that replaces the softmax O(L^2 d) matmuls; paper Fig. 1)
-  * prf_featmap      — fused phi(x) = exp(W Mx - ||Mx||^2/2 - c)/sqrt(m)
+  * prf_featmap       — fused phi(x) = exp(W Mx - ||Mx||^2/2 - c)/sqrt(m)
+  * prf_decode_step   — fused one-token serving update of the (S, z)
+    prefix state with online-stabilizer rescale (forward-only)
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import linear_attention_causal, prf_featmap
+from repro.kernels.ops import (linear_attention_causal,
+                               linear_attention_decode_step, prf_featmap)

@@ -30,6 +30,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5;
+# support both so the kernels run on either side of the rename.
+_COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, s_ref, z_ref, *, eps: float,
             nc: int):
@@ -102,7 +107,7 @@ def linear_attention_causal_fwd(qf: Array, kf: Array, v: Array, *,
             pltpu.VMEM((1, m), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "arbitrary")),
     )(qf, kf, v)
     return out[:, :l]

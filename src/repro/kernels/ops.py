@@ -70,6 +70,35 @@ def linear_attention_causal(qf: Array, kf: Array, v: Array, *,
 
 
 # ---------------------------------------------------------------------------
+# One-token PRF decode step (serving)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.prf_decode_step import prf_decode_step_fwd  # noqa: E402
+
+
+def linear_attention_decode_step(qf: Array, kf: Array, v: Array,
+                                 s: Array, z: Array, rescale: Array, *,
+                                 eps: float = 1e-6, block_b: int = 8):
+    """Advance the PRF serving state by one token via the Pallas kernel.
+
+    qf, kf, z: (..., m); v: (..., dv); s: (..., m, dv); rescale: (...,)
+    — leading dims are independent (batch, group, head) slots and get
+    flattened. Forward-only (decode is inference; no VJP registered).
+    Returns (out (..., dv), s_new, z_new), f32.
+    """
+    lead = qf.shape[:-1]
+    m = qf.shape[-1]
+    dv = v.shape[-1]
+    out, s_new, z_new = prf_decode_step_fwd(
+        qf.reshape(-1, m), kf.reshape(-1, m), v.reshape(-1, dv),
+        s.reshape(-1, m, dv), z.reshape(-1, m),
+        jnp.broadcast_to(rescale, lead).reshape(-1, 1),
+        eps=eps, block_b=block_b, interpret=_use_interpret())
+    return (out.reshape(*lead, dv), s_new.reshape(*lead, m, dv),
+            z_new.reshape(*lead, m))
+
+
+# ---------------------------------------------------------------------------
 # Fused PRF feature map
 # ---------------------------------------------------------------------------
 

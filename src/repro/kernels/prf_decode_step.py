@@ -1,0 +1,97 @@
+"""Pallas TPU kernel: fused one-token PRF decode step.
+
+The serving hot loop of linear attention (docs/kernels.md §Decode): per
+(batch*group*head) row, given the feature-mapped query/key qf, kf (m,),
+the value v (dv,), the running prefix state S (m x dv), normalizer z (m)
+and the online-stabilizer rescale factor rho = exp(c_old - c_new):
+
+    S' = rho * S + kf v^T          z' = rho * z + kf
+    out = (qf . S') / (qf . z' + eps)
+
+fused in VMEM so S never round-trips to HBM between the rescale, the
+rank-1 update and the readout. This is the gather/scatter counterpart of
+``linear_attn_scan``: that kernel carries (S, z) across sequence chunks
+at prefill time; this one advances the same state by exactly one token
+for a batch of independent serving slots.
+
+Grid: rows tiled by ``block_b``; each grid step owns ``block_b``
+independent slots, so the grid axis is embarrassingly parallel. All
+compute is VPU (rank-1 update + row reductions); there is no matmul.
+VMEM per step (f32): block_b * (2m + 2dv + 2*m*dv + 1) — for
+block_b = 8, m = 256, dv = 128: ~2.1 MB « 16 MB.
+
+On non-TPU backends the wrapper in ``repro.kernels.ops`` runs this with
+interpret=True (same numerics, no Mosaic).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _kernel(qf_ref, kf_ref, v_ref, r_ref, s_ref, z_ref,
+            o_ref, so_ref, zo_ref, *, eps: float):
+    qf = qf_ref[...].astype(jnp.float32)       # (Tb, m)
+    kf = kf_ref[...].astype(jnp.float32)       # (Tb, m)
+    v = v_ref[...].astype(jnp.float32)         # (Tb, dv)
+    rho = r_ref[...].astype(jnp.float32)       # (Tb, 1)
+    s = s_ref[...].astype(jnp.float32)         # (Tb, m, dv)
+    z = z_ref[...].astype(jnp.float32)         # (Tb, m)
+
+    s_new = s * rho[:, :, None] + kf[:, :, None] * v[:, None, :]
+    z_new = z * rho + kf
+    num = jnp.sum(qf[:, :, None] * s_new, axis=1)            # (Tb, dv)
+    den = jnp.sum(qf * z_new, axis=1, keepdims=True)         # (Tb, 1)
+
+    o_ref[...] = (num / (den + eps)).astype(o_ref.dtype)
+    so_ref[...] = s_new.astype(so_ref.dtype)
+    zo_ref[...] = z_new.astype(zo_ref.dtype)
+
+
+def prf_decode_step_fwd(qf: Array, kf: Array, v: Array, s: Array,
+                        z: Array, rescale: Array, *, eps: float = 1e-6,
+                        block_b: int = 8, interpret: bool = False):
+    """qf, kf, z: (N, m); v: (N, dv); s: (N, m, dv); rescale: (N, 1).
+
+    Returns (out (N, dv), s_new (N, m, dv), z_new (N, m)), all f32.
+    N is flattened batch*groups*heads; rows are independent slots.
+    """
+    n, m = qf.shape
+    dv = v.shape[-1]
+    tb = min(block_b, n)
+    pad = (-n) % tb
+    if pad:
+        padrow = lambda x: jnp.pad(x, ((0, pad),) + ((0, 0),) * (x.ndim - 1))
+        qf, kf, v, s, z, rescale = map(padrow, (qf, kf, v, s, z, rescale))
+    npad = n + pad
+    grid = (npad // tb,)
+
+    out, s_new, z_new = pl.pallas_call(
+        functools.partial(_kernel, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tb, m), lambda i: (i, 0)),
+            pl.BlockSpec((tb, m), lambda i: (i, 0)),
+            pl.BlockSpec((tb, dv), lambda i: (i, 0)),
+            pl.BlockSpec((tb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tb, m, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, m), lambda i: (i, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((tb, dv), lambda i: (i, 0)),
+            pl.BlockSpec((tb, m, dv), lambda i: (i, 0, 0)),
+            pl.BlockSpec((tb, m), lambda i: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((npad, dv), jnp.float32),
+            jax.ShapeDtypeStruct((npad, m, dv), jnp.float32),
+            jax.ShapeDtypeStruct((npad, m), jnp.float32),
+        ),
+        interpret=interpret,
+    )(qf, kf, v, rescale, s, z)
+    return out[:n], s_new[:n], z_new[:n]

@@ -38,6 +38,20 @@ def prf_featmap_ref(x: Array, m_mat: Array | None, w: Array,
     return jnp.exp(logits - sq - c) * (m ** -0.5)
 
 
+def prf_decode_step_ref(qf: Array, kf: Array, v: Array, s: Array,
+                        z: Array, rescale: Array, eps: float = 1e-6):
+    """One-token PRF decode oracle. qf, kf, z: (N, m); v: (N, dv);
+    s: (N, m, dv); rescale: (N, 1). Returns (out, s_new, z_new), f32."""
+    f32 = jnp.float32
+    qf, kf, v, s, z, rescale = (t.astype(f32)
+                                for t in (qf, kf, v, s, z, rescale))
+    s_new = s * rescale[:, :, None] + kf[:, :, None] * v[:, None, :]
+    z_new = z * rescale + kf
+    num = jnp.einsum("nm,nmd->nd", qf, s_new)
+    den = jnp.einsum("nm,nm->n", qf, z_new)[:, None]
+    return num / (den + eps), s_new, z_new
+
+
 def rglru_ref(x: Array, a: Array, gate: Array, h0: Array) -> tuple[Array,
                                                                    Array]:
     """RG-LRU diagonal recurrence oracle (Griffin, arXiv:2402.19427).

@@ -26,6 +26,11 @@ from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+# jax renamed TPUCompilerParams -> CompilerParams around 0.5;
+# support both so the kernels run on either side of the rename.
+_COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) or \
+    pltpu.TPUCompilerParams
+
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, t: int):
     c = pl.program_id(1)
@@ -87,7 +92,7 @@ def wkv6_fwd(r: Array, k: Array, v: Array, w: Array, u: Array, *,
         out_shape=jax.ShapeDtypeStruct((n, lp, dh), v.dtype),
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_COMPILER_PARAMS_CLS(
             dimension_semantics=("parallel", "arbitrary")),
     )(r, k, v, w, u.reshape(1, dh))
     return out[:, :l]

@@ -1,40 +1,70 @@
-"""Serving launcher: batched prefill + decode loop (deliverable (b)).
+"""Serving launcher: thin CLI over the continuous-batching engine.
 
-Demonstrates the paper's O(1)-state decoding: with a PRF kernel the serving
-state is (m x d_v) per head regardless of context length, so 32k- and
-500k-context decode cost the same. Compare --kernel exact (KV cache) vs
---kernel darkformer.
+Demonstrates the paper's O(1)-state decoding at the system level: with a
+PRF kernel the per-sequence serving state is (m x d_v) per head
+regardless of context length, and ``repro.serving.ServingEngine``
+multiplexes many sequences of different lengths over one batched decode
+step — admitting and evicting mid-decode. Compare ``--kernel exact``
+(per-slot KV-cache pages) vs ``--kernel darkformer`` (O(1) PRF state).
+Design doc: docs/serving.md.
 
-Example:
+Examples:
+  # 8 heterogeneous requests over 4 slots, greedy
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
-      --prompt-len 64 --gen 32 --batch 4
+      --requests 8 --slots 4 --prompt-len 16-64 --gen 32
+
+  # Poisson open-loop traffic at 2 req/s
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --requests 16 --slots 4 --rate 2.0
 """
 from __future__ import annotations
 
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro import configs as cfgs
-from repro.launch import mesh as mesh_lib
-from repro.launch import steps as steps_lib
 from repro.models import lm
 from repro.parallel import param_specs, make_shardings
+from repro.serving import ServingEngine
+from repro.serving.request import synthetic_requests
 from repro import checkpoint as ckpt_lib
+from repro.launch import mesh as mesh_lib
+
+
+def _parse_range(spec: str) -> tuple[int, int]:
+    """'64' -> (64, 64); '16-64' -> (16, 64)."""
+    if "-" in spec:
+        lo, hi = spec.split("-", 1)
+        return int(lo), int(hi)
+    return int(spec), int(spec)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-135m")
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--kernel", default=None)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=64)
-    ap.add_argument("--gen", type=int, default=32)
-    ap.add_argument("--max-len", type=int, default=None)
-    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--kernel", default=None,
+                    help="exact|performer|darkformer|lfk (default: config)")
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode slots (max concurrent sequences)")
+    ap.add_argument("--max-len", type=int, default=256,
+                    help="per-slot context budget (prompt + generated)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", default="16-64",
+                    help="prompt length or lo-hi range")
+    ap.add_argument("--gen", default="32", help="new tokens or lo-hi range")
+    ap.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate (req/s); 0 = all at t=0")
+    ap.add_argument("--realtime", action="store_true",
+                    help="sleep through arrival gaps instead of skipping")
+    ap.add_argument("--prefill-bucket", type=int, default=None,
+                    help="bucket prompt prefills to multiples of N "
+                         "(caps compile count; tail fed via decode)")
+    ap.add_argument("--use-kernel", action="store_true",
+                    help="route prefill/decode through the Pallas kernels")
+    ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--load", default=None, help="checkpoint dir")
     ap.add_argument("--mesh-data", type=int, default=1)
@@ -43,11 +73,19 @@ def main():
 
     cfg = cfgs.get_config(args.arch, reduced=args.reduced)
     if args.kernel:
+        # of FEATURE_KINDS, only these have a prefill/decode state path
+        # (trig/random/constant are training-time baselines)
+        servable = ("exact", "performer", "darkformer", "lfk")
+        if args.kernel not in servable:
+            raise SystemExit(f"unservable --kernel {args.kernel!r} "
+                             f"(choose from {', '.join(servable)})")
         cfg = cfgs.darkify(cfg, args.kernel, cfg.attn.num_features)
-    if cfg.modality == "audio":
-        raise SystemExit("encoder-only arch has no decode path")
+    if args.use_kernel:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, use_kernel=True)
+    if cfg.modality != "text":
+        raise SystemExit("serving engine drives text decode only")
     mesh = mesh_lib.make_local_mesh(args.mesh_data, args.mesh_model)
-    max_len = args.max_len or (args.prompt_len + args.gen + 8)
 
     params = lm.init_params(jax.random.PRNGKey(args.seed), cfg)
     if args.load:
@@ -56,44 +94,46 @@ def main():
         param_specs(params, mesh, moe=cfg.moe is not None), mesh)
     params = jax.tree_util.tree_map(jax.device_put, params, pshard)
 
-    key = jax.random.PRNGKey(args.seed + 1)
-    prompt = jax.random.randint(key, (args.batch, args.prompt_len), 0,
-                                cfg.vocab)
-    batch = {"tokens": prompt}
-    if cfg.modality == "vlm":
-        batch["patch_embeds"] = jnp.zeros(
-            (args.batch, cfg.num_patches, cfg.d_model), cfg.param_dtype)
+    engine = ServingEngine(params, cfg, max_slots=args.slots,
+                           max_len=args.max_len,
+                           prefill_bucket=args.prefill_bucket,
+                           seed=args.seed)
+    reqs = synthetic_requests(
+        args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
+        prompt_range=_parse_range(args.prompt_len),
+        gen_range=_parse_range(args.gen), temperature=args.temperature)
+    try:
+        for r in reqs:
+            engine.submit(r)
+    except ValueError as e:                    # e.g. prompt >= max_len
+        raise SystemExit(f"bad request: {e}")
 
-    prefill_fn = jax.jit(steps_lib.make_prefill_step(cfg, max_len))
-    decode_fn = jax.jit(steps_lib.make_decode_step(cfg),
-                        donate_argnums=(2,))
+    print(f"serving {args.requests} requests over {args.slots} slots "
+          f"(kernel={cfg.attn.kind}, max_len={args.max_len}, "
+          f"rate={args.rate or 'batch'})")
+    results = engine.run(realtime=args.realtime)
 
-    t0 = time.time()
-    logits, state = prefill_fn(params, batch)
-    logits = jax.block_until_ready(logits)
-    t_prefill = time.time() - t0
-    print(f"prefill: {args.batch}x{args.prompt_len} tokens in "
-          f"{t_prefill:.3f}s "
-          f"({args.batch * args.prompt_len / t_prefill:.0f} tok/s)")
+    for res in sorted(results, key=lambda r: r.uid):
+        span = res.finish_time - res.arrival_time
+        print(f"  req {res.uid}: prompt={len(res.prompt)} "
+              f"gen={len(res.tokens)} ttft={res.ttft * 1e3:.0f}ms "
+              f"span={span:.2f}s tokens[:8]={res.tokens[:8]}")
 
-    tok = jnp.argmax(logits[:, -1], axis=-1)
-    outs = [tok]
-    t0 = time.time()
-    for i in range(args.gen - 1):
-        logits, state = decode_fn(params, tok, state)
-        if args.temperature > 0:
-            key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub,
-                                         logits / args.temperature, -1)
-        else:
-            tok = jnp.argmax(logits, axis=-1)
-        outs.append(tok)
-    jax.block_until_ready(outs[-1])
-    t_dec = time.time() - t0
-    gen = jnp.stack(outs, axis=1)
-    print(f"decode: {args.batch}x{args.gen - 1} tokens in {t_dec:.3f}s "
-          f"({args.batch * (args.gen - 1) / t_dec:.0f} tok/s)")
-    print("sample[0]:", gen[0].tolist())
+    st = engine.stats
+    tpots = np.array([t for r in results for t in r.tpots])
+    ttfts = np.array([r.ttft for r in results if r.token_times])
+    span = max(r.finish_time for r in results) - min(
+        r.arrival_time for r in results)
+    print(f"throughput: {st['emitted_tokens'] / max(span, 1e-9):.1f} tok/s "
+          f"({st['emitted_tokens']} tokens in {span:.2f}s)")
+    if tpots.size:
+        print(f"per-token latency: p50={np.percentile(tpots, 50) * 1e3:.1f}ms "
+              f"p99={np.percentile(tpots, 99) * 1e3:.1f}ms")
+    if ttfts.size:
+        print(f"ttft: p50={np.percentile(ttfts, 50) * 1e3:.0f}ms "
+              f"p99={np.percentile(ttfts, 99) * 1e3:.0f}ms")
+    print(f"slot occupancy: {st['mean_occupancy'] * 100:.0f}% over "
+          f"{st['decode_steps']} decode steps")
 
 
 if __name__ == "__main__":

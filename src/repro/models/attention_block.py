@@ -96,19 +96,32 @@ def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
 
 
 def attn_decode(params, x, state, cfg, *, n_heads, n_kv, d_head,
-                position, window=None, qk_norm=False, rope_theta=10000.0):
-    """x: (B, 1, d_model); position: () int32 current index."""
+                position, window=None, qk_norm=False, rope_theta=10000.0,
+                use_kernel=False):
+    """x: (B, 1, d_model); position: () int32 current index, or (B,)
+    int32 per-slot positions (continuous batching — each slot RoPE-rotates
+    by its own sequence position)."""
+    if position.ndim == 0:
+        positions = position[None]                       # (1,) -> all rows
+    else:
+        positions = position.reshape(-1, 1, 1, 1)        # (B,1,1,1)
     q, k, v = _project(params, x, n_heads, n_kv, d_head, qk_norm,
-                       position[None], rope_theta)
+                       positions, rope_theta)
     out, state = rfa.rf_attention_decode(q, k, v, state,
                                          params.get("feat"), cfg,
-                                         window=window)
+                                         window=window,
+                                         use_kernel=use_kernel)
     return _merge_heads(out, params), state
 
 
 def init_attn_serve_state(cfg: fm.FeatureConfig, b, n_heads, n_kv, d_head,
-                          max_len, window=None) -> rfa.AttnServeState:
-    """ShapeDtype-consistent initial serving state for one attention block."""
+                          max_len, window=None,
+                          per_slot=False) -> rfa.AttnServeState:
+    """ShapeDtype-consistent initial serving state for one attention block.
+
+    ``per_slot`` gives the exact-attention cache a (B,) length vector so
+    each batch row (serving slot) tracks its own write index.
+    """
     hg = n_heads // n_kv
     if cfg.kind == "exact":
         # NOTE: window mode could use a rolling buffer of size `window`;
@@ -117,6 +130,6 @@ def init_attn_serve_state(cfg: fm.FeatureConfig, b, n_heads, n_kv, d_head,
         return rfa.AttnServeState(
             kv_k=jnp.zeros((b, n_kv, lmax, d_head), jnp.float32),
             kv_v=jnp.zeros((b, n_kv, lmax, d_head), jnp.float32),
-            length=jnp.zeros((), jnp.int32))
+            length=jnp.zeros((b,) if per_slot else (), jnp.int32))
     return rfa.init_linear_serve_state(b, n_kv, hg, cfg.num_features,
                                        d_head)

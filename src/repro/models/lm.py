@@ -182,7 +182,7 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
         else:  # decode
             mix, new_state = ab.attn_decode(
                 params["attn"], h, state, cfg.attn, position=position,
-                window=window, **common)
+                window=window, use_kernel=cfg.use_kernel, **common)
         x = x + mix
         h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
         if cfg.moe:
@@ -396,11 +396,12 @@ def loss_fn(params, cfg: ModelConfig, batch: dict,
 # Serving: prefill + decode
 # ---------------------------------------------------------------------------
 
-def _init_block_state(cfg: ModelConfig, kind: str, b: int, max_len: int):
+def _init_block_state(cfg: ModelConfig, kind: str, b: int, max_len: int,
+                      per_slot: bool = False):
     if kind in ("attn", "local"):
         return ab.init_attn_serve_state(
             cfg.attn, b, cfg.n_heads, cfg.n_kv, cfg.head_dim, max_len,
-            cfg.window if kind == "local" else None)
+            cfg.window if kind == "local" else None, per_slot=per_slot)
     if kind == "rec":
         return rec.init_rglru_state(b, cfg.rnn_width)
     if kind == "rwkv":
@@ -409,20 +410,28 @@ def _init_block_state(cfg: ModelConfig, kind: str, b: int, max_len: int):
     raise ValueError(kind)
 
 
-def init_serve_state(cfg: ModelConfig, b: int, max_len: int) -> dict:
+def init_serve_state(cfg: ModelConfig, b: int, max_len: int,
+                     per_slot: bool = False) -> dict:
+    """Initial serving state for a batch of b sequences.
+
+    ``per_slot`` turns the state into a continuous-batching slot pool:
+    ``pos`` (and the exact-attention cache lengths) become (b,) vectors so
+    every batch row advances independently (see repro.serving).
+    """
     state: dict[str, Any] = {}
     if cfg.n_units > 0:
         def one_unit(_):
-            return {f"b{i}": _init_block_state(cfg, kind, b, max_len)
+            return {f"b{i}": _init_block_state(cfg, kind, b, max_len,
+                                               per_slot)
                     for i, kind in enumerate(cfg.block_pattern)}
         state["units"] = jax.vmap(one_unit)(jnp.arange(cfg.n_units))
     if cfg.n_rem:
         state["rem"] = [
             _init_block_state(
                 cfg, cfg.block_pattern[i % len(cfg.block_pattern)], b,
-                max_len)
+                max_len, per_slot)
             for i in range(cfg.n_rem)]
-    state["pos"] = jnp.zeros((), jnp.int32)
+    state["pos"] = jnp.zeros((b,) if per_slot else (), jnp.int32)
     return state
 
 

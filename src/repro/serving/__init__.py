@@ -1,0 +1,14 @@
+"""Continuous-batching serving over the paper's O(1)-state PRF decode.
+
+Public surface:
+
+  * ``Request`` / ``RequestResult`` — what clients submit and get back
+  * ``ServingEngine``               — queue + slot pool + batched decode
+  * ``slots``                       — slot-pool pytree primitives
+
+Design doc: docs/serving.md. The CLI front-end is
+``python -m repro.launch.serve``.
+"""
+from repro.serving import slots
+from repro.serving.engine import ServingEngine
+from repro.serving.request import Request, RequestResult

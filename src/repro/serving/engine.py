@@ -1,0 +1,319 @@
+"""Continuous-batching serving engine over the O(1)-state PRF decode.
+
+The paper's serving claim (docs/serving.md) is that PRF attention decodes
+from a fixed-size running state — an (m x d_v) sum S, an (m,) normalizer
+z and the running stabilizer max c per head — so a server can multiplex
+many users over one batched decode step regardless of how long each
+context is. This engine is that multiplexer:
+
+  * a FIFO **request queue** with arrival times (Poisson traffic plugs in
+    here — see benchmarks/serve_latency.py);
+  * a device-resident **slot pool**: one serve-state pytree with
+    ``max_slots`` batch rows, per-slot positions and (for the exact
+    fallback) per-slot KV write indices (repro/serving/slots.py);
+  * a **scheduler** that admits a queued request into any free slot by
+    prefilling it as a B=1 sequence and scattering the resulting state
+    into the pool, and evicts a slot the moment its sequence finishes —
+    both mid-decode, without touching other slots;
+  * one jitted **batched decode step** that advances all slots in
+    lock-step; inactive slots are masked so their state stays bit-frozen.
+
+Numerical contract: slot rows are computed elementwise over the batch
+axis, so a sequence decoded inside a busy heterogeneous batch produces
+bit-identical f32 logits to the same sequence decoded alone with
+``lm.prefill`` + ``lm.decode_step`` (tests/test_serving_engine.py
+asserts this for darkformer, performer and exact kernels).
+
+Prefill compiles once per distinct prompt length. Setting
+``prefill_bucket=N`` caps that at one compile per multiple of N: the
+prompt head (largest multiple of N) is prefills and the remaining tail
+tokens are fed through the single-sequence decode path before the state
+is scattered into the pool. Bucketed admission changes the k-stabilizer
+trajectory (a running max instead of one whole-prompt max), so outputs
+match the unbucketed path only up to f32 rounding — leave it off when
+bit-exactness matters more than compile count.
+"""
+from __future__ import annotations
+
+import bisect
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.serving import slots as slot_ops
+from repro.serving.request import Request, RequestResult
+
+Array = jax.Array
+
+
+class _Slot:
+    """Host-side record of the sequence occupying one pool row."""
+
+    __slots__ = ("req", "result", "budget")
+
+    def __init__(self, req: Request, result: RequestResult, budget: int):
+        self.req = req
+        self.result = result
+        self.budget = budget
+
+
+class ServingEngine:
+    """Continuous-batching generation over a fixed slot pool.
+
+    Typical use::
+
+        eng = ServingEngine(params, cfg, max_slots=8, max_len=512)
+        eng.submit(Request(prompt=[...], max_new_tokens=64))
+        results = eng.run()
+
+    or drive it step-by-step (one batched decode per ``step()``) and
+    ``submit`` more requests while others are mid-decode.
+    """
+
+    def __init__(self, params, cfg: lm.ModelConfig, *, max_slots: int = 4,
+                 max_len: int = 256, prefill_bucket: Optional[int] = None,
+                 seed: int = 0):
+        if cfg.modality != "text":
+            raise ValueError("serving engine drives text decode only")
+        if prefill_bucket is not None and prefill_bucket < 1:
+            raise ValueError("prefill_bucket must be >= 1")
+        self.params = params
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.prefill_bucket = prefill_bucket
+        self.pool = lm.init_serve_state(cfg, b=max_slots, max_len=max_len,
+                                        per_slot=True)
+
+        self._slots: list[Optional[_Slot]] = [None] * max_slots
+        self._active = np.zeros(max_slots, bool)
+        self._temps = np.zeros(max_slots, np.float32)
+        self._toks = np.zeros(max_slots, np.int32)
+        self._queue: list[Request] = []        # sorted by arrival_time
+        self._key = jax.random.PRNGKey(seed)
+        self._step_count = 0
+        self._t0: Optional[float] = None
+        self._stats = {"decode_steps": 0, "decode_slot_steps": 0,
+                       "prefill_tokens": 0, "emitted_tokens": 0,
+                       "admitted": 0, "finished": 0}
+
+        cfg_ = cfg  # closed over by the jitted steps
+
+        def _decode(params, pool, toks, active):
+            logits, new = lm.decode_step(params, cfg_, toks, pool)
+            return logits, slot_ops.freeze_inactive(pool, new, active)
+
+        def _prefill(params, tokens):
+            logits, st = lm.prefill(params, cfg_, {"tokens": tokens},
+                                    max_len=max_len)
+            return logits[:, -1], st           # (1, V), state
+
+        def _decode_b1(params, tok, st):
+            return lm.decode_step(params, cfg_, tok, st)
+
+        def _write(pool, st, idx):
+            return slot_ops.write_slot(pool, st, idx)
+
+        def _sample(key, logits, temps):
+            greedy = jnp.argmax(logits, axis=-1)
+            scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+            drawn = jax.random.categorical(key, scaled, axis=-1)
+            return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
+
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
+        self._decode_b1_fn = jax.jit(_decode_b1)
+        self._write_fn = jax.jit(_write, donate_argnums=(0,))
+        self._sample_fn = jax.jit(_sample)
+        # one jit wrapper; XLA caches one executable per prompt length
+        # (prefill_bucket caps the number of distinct lengths)
+        self._prefill_fn = jax.jit(_prefill)
+
+    # -- clock ------------------------------------------------------------
+
+    def _now(self) -> float:
+        if self._t0 is None:
+            self._t0 = time.monotonic()
+        return time.monotonic() - self._t0
+
+    # -- client API -------------------------------------------------------
+
+    def submit(self, req: Union[Request, Sequence[int]], **kw) -> int:
+        """Queue a request (or a bare token prompt). Returns its uid."""
+        if not isinstance(req, Request):
+            req = Request(prompt=list(req), **kw)
+        if len(req.prompt) == 0:
+            raise ValueError("empty prompt")
+        if len(req.prompt) >= self.max_len:
+            raise ValueError(
+                f"prompt length {len(req.prompt)} >= max_len {self.max_len}")
+        if req.max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (admission "
+                             "always samples the first token)")
+        bisect.insort(self._queue, req, key=lambda r: r.arrival_time)
+        return req.uid
+
+    def cancel(self, uid: int) -> Optional[RequestResult]:
+        """Evict a queued or mid-decode request. Returns its partial
+        result (None if the uid is unknown)."""
+        for i, req in enumerate(self._queue):
+            if req.uid == uid:
+                self._queue.pop(i)
+                return RequestResult(uid=uid, prompt=list(req.prompt),
+                                     arrival_time=req.arrival_time,
+                                     cancelled=True)
+        for i, slot in enumerate(self._slots):
+            if slot is not None and slot.req.uid == uid:
+                res = slot.result
+                res.cancelled = True
+                res.finish_time = self._now()
+                self._free(i)
+                return res
+        return None
+
+    @property
+    def num_active(self) -> int:
+        return int(self._active.sum())
+
+    @property
+    def has_work(self) -> bool:
+        return bool(self._queue) or self.num_active > 0
+
+    def next_arrival(self) -> Optional[float]:
+        return self._queue[0].arrival_time if self._queue else None
+
+    # -- scheduler --------------------------------------------------------
+
+    def _free(self, i: int) -> None:
+        self._slots[i] = None
+        self._active[i] = False
+        self._temps[i] = 0.0
+
+    def _sample_one(self, req: Request, logits_row: Array) -> int:
+        key = jax.random.fold_in(
+            jax.random.fold_in(self._key, req.uid), self._step_count)
+        temps = jnp.full((1,), req.temperature, jnp.float32)
+        return int(self._sample_fn(key, logits_row, temps)[0])
+
+    def _admit(self, req: Request, slot: int) -> None:
+        prompt = np.asarray(req.prompt, np.int32)
+        length = len(prompt)
+        if self.prefill_bucket and length > self.prefill_bucket:
+            head = (length // self.prefill_bucket) * self.prefill_bucket
+        else:
+            head = length
+        logits, st = self._prefill_fn(
+            self.params, jnp.asarray(prompt[None, :head]))
+        for j in range(head, length):          # decode-tail admission
+            tok = jnp.asarray(prompt[j:j + 1])
+            logits, st = self._decode_b1_fn(self.params, tok, st)
+        self.pool = self._write_fn(self.pool, st, jnp.int32(slot))
+
+        first = self._sample_one(req, logits)
+        now = self._now()
+        result = RequestResult(uid=req.uid, prompt=list(map(int, prompt)),
+                               tokens=[first],
+                               arrival_time=req.arrival_time,
+                               admit_time=now, token_times=[now])
+        # exact-cache pages hold max_len keys: prompt + decoded tokens
+        budget = min(req.max_new_tokens, self.max_len - length)
+        self._slots[slot] = _Slot(req, result, budget)
+        self._active[slot] = True
+        self._temps[slot] = req.temperature
+        self._toks[slot] = first
+        self._stats["prefill_tokens"] += length
+        self._stats["emitted_tokens"] += 1
+        self._stats["admitted"] += 1
+
+    def _admissions(self, now: float) -> None:
+        while self._queue and self._queue[0].arrival_time <= now:
+            free = [i for i in range(self.max_slots)
+                    if self._slots[i] is None]
+            if not free:
+                return
+            self._admit(self._queue.pop(0), free[0])
+
+    # -- decode -----------------------------------------------------------
+
+    def step(self) -> list[RequestResult]:
+        """Admit what has arrived, run one batched decode step over the
+        active slots, evict finished sequences. Returns newly finished
+        results (possibly empty)."""
+        finished: list[RequestResult] = []
+        self._admissions(self._now())
+        # admission may already exhaust a request (budget/eos on token 1)
+        for i, slot in enumerate(self._slots):
+            if slot is not None and self._done(slot):
+                finished.append(self._finish(i))
+        if not self._active.any():
+            return finished
+
+        self._step_count += 1
+        logits, self.pool = self._decode_fn(
+            self.params, self.pool, jnp.asarray(self._toks),
+            jnp.asarray(self._active))
+        key = jax.random.fold_in(self._key, self._step_count)
+        toks = np.asarray(self._sample_fn(key, logits,
+                                          jnp.asarray(self._temps)))
+        now = self._now()
+        n_act = int(self._active.sum())
+        self._stats["decode_steps"] += 1
+        self._stats["decode_slot_steps"] += n_act
+        for i in np.nonzero(self._active)[0]:
+            slot = self._slots[i]
+            tok = int(toks[i])
+            slot.result.tokens.append(tok)
+            slot.result.token_times.append(now)
+            self._toks[i] = tok
+            self._stats["emitted_tokens"] += 1
+            if self._done(slot):
+                finished.append(self._finish(i))
+        return finished
+
+    def _done(self, slot: _Slot) -> bool:
+        toks = slot.result.tokens
+        if len(toks) >= slot.budget:
+            return True
+        return slot.req.eos_id is not None and toks[-1] == slot.req.eos_id
+
+    def _finish(self, i: int) -> RequestResult:
+        res = self._slots[i].result
+        res.finish_time = self._now()
+        self._free(i)
+        self._stats["finished"] += 1
+        return res
+
+    # -- batch runner -----------------------------------------------------
+
+    def run(self, realtime: bool = False) -> list[RequestResult]:
+        """Drive ``step()`` until queue and slots drain.
+
+        ``realtime=True`` honors future ``arrival_time``s by sleeping
+        while the pool is empty (Poisson-traffic benchmarking); otherwise
+        arrival order is respected but waits are skipped.
+        """
+        results: list[RequestResult] = []
+        while self.has_work:
+            if self.num_active == 0 and self._queue:
+                wait = self._queue[0].arrival_time - self._now()
+                if wait > 0:
+                    if realtime:
+                        time.sleep(wait)
+                    else:
+                        self._t0 -= wait       # jump the clock forward
+            results.extend(self.step())
+        return results
+
+    # -- metrics ----------------------------------------------------------
+
+    @property
+    def stats(self) -> dict:
+        s = dict(self._stats)
+        steps = max(s["decode_steps"], 1)
+        # fraction of slot-steps that carried a live sequence
+        s["mean_occupancy"] = (s["decode_slot_steps"]
+                               / (steps * self.max_slots))
+        return s

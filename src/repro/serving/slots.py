@@ -1,0 +1,84 @@
+"""Slot-pool pytree surgery for the continuous-batching engine.
+
+The engine's device state is one big serve-state pytree built by
+``lm.init_serve_state(cfg, b=max_slots, per_slot=True)``. Slot i of the
+pool is batch row i of every leaf, but the slot axis is NOT uniform
+across the tree:
+
+  * ``state["units"]`` leaves are stacked over scanned layer units, so
+    they carry a leading (n_units,) axis and the slot axis is **1**;
+  * ``state["rem"]`` (unscanned remainder layers) and ``state["pos"]``
+    have the slot axis at **0**;
+  * scalar per-sequence leaves produced by a B=1 prefill (``pos``, the
+    exact-cache ``length``) have NO slot axis and are broadcast in.
+
+All engine mutations reduce to three primitives here — gather a slot,
+scatter a (B=1) state into a slot, and a masked freeze of inactive
+slots — each written once over that axis map instead of per leaf.
+These run inside the engine's jitted step functions; ``idx`` and
+``active`` are traced, so admission at any slot reuses one compile.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def tree_slot_map(fn, pool: dict, *others: dict) -> dict:
+    """Map ``fn(pool_leaf, *other_leaves, axis=slot_axis)`` over serve
+    states. ``others`` must share ``pool``'s tree structure (None leaves,
+    e.g. the unused half of AttnServeState, are skipped by tree_map)."""
+    out = {}
+    if "units" in pool:
+        out["units"] = jax.tree_util.tree_map(
+            lambda p, *o: fn(p, *o, axis=1), pool["units"],
+            *[t["units"] for t in others])
+    if "rem" in pool:
+        out["rem"] = jax.tree_util.tree_map(
+            lambda p, *o: fn(p, *o, axis=0), pool["rem"],
+            *[t["rem"] for t in others])
+    out["pos"] = fn(pool["pos"], *[t["pos"] for t in others], axis=0)
+    return out
+
+
+def write_slot(pool: dict, new: dict, idx: Array) -> dict:
+    """Scatter a single-sequence serve state into slot ``idx``.
+
+    ``new`` is the state returned by a B=1 ``lm.prefill`` (or a B=1
+    decode chain): its batch axis has size 1 where present, and its
+    per-sequence scalars (``pos``, exact ``length``) have one dim less
+    than the pool leaf — those are unsqueezed at the slot axis first.
+    """
+    def _write(p, n, axis):
+        n = jnp.asarray(n)
+        if n.ndim < p.ndim:
+            n = jnp.expand_dims(n, axis)
+        return jax.lax.dynamic_update_slice_in_dim(
+            p, n.astype(p.dtype), idx, axis=axis)
+    return tree_slot_map(_write, pool, new)
+
+
+def read_slot(pool: dict, idx: Array) -> dict:
+    """Gather slot ``idx`` back out as a B=1 serve state (keeps the
+    size-1 slot axis so the result round-trips through write_slot)."""
+    def _read(p, axis):
+        return jax.lax.dynamic_slice_in_dim(p, idx, 1, axis=axis)
+    return tree_slot_map(_read, pool)
+
+
+def freeze_inactive(pool_old: dict, pool_new: dict, active: Array) -> dict:
+    """Keep ``pool_new`` where ``active`` (bool (S,)), else ``pool_old``.
+
+    Decode always advances all S slots in lock-step; this masks the
+    write-back so evicted/empty slots stay bit-frozen instead of
+    accumulating garbage (and so the exact-cache write index of a free
+    slot cannot run past the end of its page).
+    """
+    def _sel(old, new, axis):
+        shape = [1] * old.ndim
+        shape[axis] = active.shape[0]
+        return jnp.where(active.reshape(shape), new, old)
+    return tree_slot_map(lambda o, n, axis: _sel(o, n, axis),
+                         pool_old, pool_new)

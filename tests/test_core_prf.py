@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import (FeatureConfig, init_feature_params,
                         orthogonal_projection, gaussian_projection,
@@ -34,11 +34,17 @@ def test_eq3_dark_unbiased_mc():
     k = 0.4 * jax.random.normal(kk, (d,))
     m_mat = 0.5 * jax.random.normal(km, (r, d))
     sigma = m_mat.T @ m_mat
-    w = jax.random.normal(kw, (m, r))
-    omegas = w @ m_mat                     # omega = M^T w ~ N(0, Sigma)
-    est = vr.mc_dark_estimate(q, k, omegas, sigma)
     true = float(jnp.exp(q @ sigma @ k))
-    assert abs(float(est) - true) / true < 0.02
+    # the positive-feature estimator is unbiased but heavy-tailed (exp
+    # moments), so a single fixed draw can sit several percent off even
+    # at m = 2e5; average independent projection draws before asserting.
+    ests = []
+    for s in range(4):
+        w = jax.random.normal(jax.random.fold_in(kw, s), (m, r))
+        omegas = w @ m_mat                 # omega = M^T w ~ N(0, Sigma)
+        ests.append(float(vr.mc_dark_estimate(q, k, omegas, sigma)))
+    est = sum(ests) / len(ests)
+    assert abs(est - true) / true < 0.02
 
 
 def test_prop41_importance_equivalence():

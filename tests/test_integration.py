@@ -65,17 +65,22 @@ def test_finetune_from_checkpoint_and_qkv_only(tmp_path):
 
 
 def test_serve_launcher_decodes():
+    """The serve CLI drives the continuous-batching engine: more requests
+    than slots, heterogeneous lengths, full stats report."""
     out = run_cmd(["repro.launch.serve", "--arch", "smollm-135m",
-                   "--reduced", "--batch", "2", "--prompt-len", "16",
-                   "--gen", "8"])
-    assert "decode:" in out and "sample[0]:" in out
+                   "--reduced", "--requests", "3", "--slots", "2",
+                   "--prompt-len", "8-16", "--gen", "8",
+                   "--max-len", "48"])
+    assert "throughput:" in out and "slot occupancy:" in out
+    assert out.count("req ") == 3
 
 
 def test_serve_launcher_hybrid():
     out = run_cmd(["repro.launch.serve", "--arch", "recurrentgemma-2b",
-                   "--reduced", "--batch", "2", "--prompt-len", "12",
-                   "--gen", "6", "--kernel", "darkformer"])
-    assert "decode:" in out
+                   "--reduced", "--requests", "2", "--slots", "2",
+                   "--prompt-len", "12", "--gen", "6",
+                   "--max-len", "32", "--kernel", "darkformer"])
+    assert "throughput:" in out
 
 
 def test_qkv_only_freeze_semantics():

@@ -204,3 +204,63 @@ def test_wkv6_ops_gradients():
 
     np.testing.assert_allclose(np.asarray(jax.grad(lk)(r)),
                                np.asarray(jax.grad(lr)(r)), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# prf_decode_step: one-token serving update
+# ---------------------------------------------------------------------------
+
+from repro.kernels.prf_decode_step import prf_decode_step_fwd  # noqa: E402
+
+
+@pytest.mark.parametrize("n,m,dv,block_b", [
+    (1, 8, 4, 8),
+    (16, 32, 16, 8),
+    (13, 16, 8, 8),               # n % block_b != 0 -> padding path
+    (6, 64, 32, 4),
+    (3, 24, 12, 16),              # block_b > n -> clamped tile
+])
+def test_prf_decode_step_vs_ref(n, m, dv, block_b):
+    key = jax.random.PRNGKey(n * 31 + m)
+    kq, kk, kv, ks, kz, kr = jax.random.split(key, 6)
+    qf = jax.random.uniform(kq, (n, m))
+    kf = jax.random.uniform(kk, (n, m))
+    v = jax.random.normal(kv, (n, dv))
+    s = jax.random.normal(ks, (n, m, dv))
+    z = jax.random.uniform(kz, (n, m)) + 0.5
+    # online-stabilizer rescale in (0, 1] as produced by exp(c_old-c_new)
+    rescale = jax.random.uniform(kr, (n, 1), minval=0.05, maxval=1.0)
+    out, s_new, z_new = prf_decode_step_fwd(qf, kf, v, s, z, rescale,
+                                            block_b=block_b,
+                                            interpret=True)
+    eo, es, ez = ref.prf_decode_step_ref(qf, kf, v, s, z, rescale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eo), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s_new), np.asarray(es),
+                               atol=2e-5)
+    np.testing.assert_allclose(np.asarray(z_new), np.asarray(ez),
+                               atol=2e-5)
+
+
+def test_prf_decode_step_ops_wrapper_shapes():
+    """ops.linear_attention_decode_step flattens (B,G,Hg) leads and
+    broadcasts a (B,G,1) rescale across heads."""
+    key = jax.random.PRNGKey(5)
+    b, g, hg, m, dv = 2, 3, 2, 16, 8
+    kq, kk, kv, ks, kz, kr = jax.random.split(key, 6)
+    qf = jax.random.uniform(kq, (b, g, hg, m))
+    kf = jax.random.uniform(kk, (b, g, hg, m))
+    v = jax.random.normal(kv, (b, g, hg, dv))
+    s = jax.random.normal(ks, (b, g, hg, m, dv))
+    z = jax.random.uniform(kz, (b, g, hg, m)) + 0.5
+    rescale = jax.random.uniform(kr, (b, g, 1), minval=0.1, maxval=1.0)
+    out, s_new, z_new = ops.linear_attention_decode_step(
+        qf, kf, v, s, z, rescale)
+    assert out.shape == (b, g, hg, dv)
+    assert s_new.shape == (b, g, hg, m, dv)
+    assert z_new.shape == (b, g, hg, m)
+    eo, es, ez = ref.prf_decode_step_ref(
+        qf.reshape(-1, m), kf.reshape(-1, m), v.reshape(-1, dv),
+        s.reshape(-1, m, dv), z.reshape(-1, m),
+        jnp.broadcast_to(rescale, (b, g, hg)).reshape(-1, 1))
+    np.testing.assert_allclose(np.asarray(out).reshape(-1, dv),
+                               np.asarray(eo), atol=2e-5)
