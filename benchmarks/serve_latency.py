@@ -11,6 +11,15 @@ generation lengths arrive at a fixed rate and get multiplexed over a
 small slot pool. Reports tokens/s, p50/p99 per-token latency (TPOT),
 p50/p99 TTFT and mean slot occupancy, for the PRF kernel vs the exact
 paged-KV fallback.
+
+Part 3 (chunked prefill): mixed traffic — short decode-heavy requests
+sharing the pool with a long-prompt admission — under blocking
+(``chunk_tokens=None``) vs chunked admission. The long prefill stalls
+every active decode slot in blocking mode; chunking bounds the stall by
+the chunk execution time. Reports the short requests' TPOT p50/p99/max
+("stall") and the long request's TTFT for both schedules; the snapshot
+lands in experiments/bench/BENCH_serve_chunked.json (tracked snapshot:
+BENCH_serve_chunked.json at the repo root).
 """
 from __future__ import annotations
 
@@ -20,7 +29,7 @@ import numpy as np
 
 from repro import configs as cfgs
 from repro.models import lm
-from repro.serving import ServingEngine
+from repro.serving import Request, ServingEngine
 from repro.serving.request import synthetic_requests
 from benchmarks.common import save_result, time_call
 
@@ -61,7 +70,7 @@ def run_engine_traffic(fast: bool = True, rate: float = 4.0,
         cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         eng = ServingEngine(params, cfg, max_slots=slots, max_len=96,
-                            prefill_bucket=8)
+                            chunk_tokens=8)
         for r in synthetic_requests(n_req, cfg.vocab, seed=1, rate=rate,
                                     prompt_range=(8, 48),
                                     gen_range=(8, 24)):
@@ -93,10 +102,84 @@ def run_engine_traffic(fast: bool = True, rate: float = 4.0,
     return out
 
 
+def _rand_prompt(rng, vocab, l):
+    return [rng.randrange(vocab) for _ in range(l)]
+
+
+def _mixed_traffic_pass(eng, vocab, *, seed, long_len, short_gen):
+    """Drive the canonical mixed trace: 3 short decode-heavy requests
+    fill slots, then a long prompt admits mid-decode. Returns
+    (short_results, long_result)."""
+    import random
+    rng = random.Random(seed)
+    short_uids = [eng.submit(Request(
+        prompt=_rand_prompt(rng, vocab, 8 + 2 * i),
+        max_new_tokens=short_gen)) for i in range(3)]
+    for _ in range(3):
+        eng.step()                      # shorts admitted + decoding
+    long_uid = eng.submit(Request(prompt=_rand_prompt(rng, vocab,
+                                                      long_len),
+                                  max_new_tokens=4))
+    results = {r.uid: r for r in eng.run()}
+    return [results[u] for u in short_uids], results[long_uid]
+
+
+def run_chunked_prefill(fast: bool = True, chunk_tokens: int = 128,
+                        long_len: int = 1024) -> dict:
+    """Blocking vs chunked admission under mixed long-prompt + decode
+    traffic. The metric that matters is the short requests' worst-case
+    TPOT ("stall"): blocking admission executes the whole long prompt
+    between two decode steps; chunking caps it at chunk_tokens. Each
+    schedule is measured over several repeats of the trace (after a
+    compile-warmup pass on the same engine) so the p99 reflects the
+    repeated stall events, not one-off host noise."""
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    short_gen = 24 if fast else 48
+    reps = 3 if fast else 6
+    out = {"chunk_tokens": chunk_tokens, "long_len": long_len}
+    for label, chunk in (("blocking", None), ("chunked", chunk_tokens)):
+        eng = ServingEngine(params, cfg, max_slots=4, max_len=2048,
+                            chunk_tokens=chunk)
+        # warmup pass compiles every chunk/prompt length in the trace
+        _mixed_traffic_pass(eng, cfg.vocab, seed=1, long_len=long_len,
+                            short_gen=short_gen)
+        tpots, ttfts = [], []
+        for rep in range(reps):
+            shorts, long_res = _mixed_traffic_pass(
+                eng, cfg.vocab, seed=2 + rep, long_len=long_len,
+                short_gen=short_gen)
+            tpots += [t for r in shorts for t in r.tpots]
+            ttfts.append(long_res.ttft)
+        tpots = np.array(tpots)
+        st = eng.stats
+        row = {
+            "tpot_p50_ms": float(np.percentile(tpots, 50) * 1e3),
+            "tpot_p99_ms": float(np.percentile(tpots, 99) * 1e3),
+            "tpot_max_ms": float(tpots.max() * 1e3),
+            "long_ttft_ms": float(np.median(ttfts) * 1e3),
+            "max_prefill_tokens_per_step":
+                st["max_prefill_tokens_per_step"],
+        }
+        out[label] = row
+        print(f"  admission[{label}]: short tpot "
+              f"p50={row['tpot_p50_ms']:.1f}ms "
+              f"p99={row['tpot_p99_ms']:.1f}ms "
+              f"max={row['tpot_max_ms']:.1f}ms, "
+              f"long ttft={row['long_ttft_ms']:.0f}ms, "
+              f"max prefill/step={row['max_prefill_tokens_per_step']}",
+              flush=True)
+    out["stall_improvement"] = (out["blocking"]["tpot_p99_ms"]
+                                / max(out["chunked"]["tpot_p99_ms"], 1e-9))
+    save_result("BENCH_serve_chunked", out)
+    return out
+
+
 def run(fast: bool = True) -> dict:
     scaling = run_context_scaling(fast)
     traffic = run_engine_traffic(fast)
-    out = {**scaling, "traffic": traffic}
+    chunked = run_chunked_prefill(fast)
+    out = {**scaling, "traffic": traffic, "chunked_prefill": chunked}
     save_result("serve_latency", out)
     return out
 
@@ -108,3 +191,5 @@ if __name__ == "__main__":
     for kind, row in r["traffic"].items():
         print(f"{kind}: {row['tok_per_s']:.1f} tok/s "
               f"@ occupancy {row['mean_occupancy'] * 100:.0f}%")
+    print("chunked admission p99-stall improvement: "
+          f"{r['chunked_prefill']['stall_improvement']:.1f}x")

@@ -1,9 +1,21 @@
 #!/usr/bin/env bash
 # Tier-1 verify, reproducible from a fresh checkout:
 #   pip install -r requirements.txt -r requirements-dev.txt
-#   scripts/check.sh
+#   scripts/check.sh              # full tier-1 suite (incl. interpret-mode
+#                                 # Pallas kernel tests)
+#   scripts/check.sh --fast       # skips @pytest.mark.slow (multi-device
+#                                 # subprocess + launcher integration tests)
 # Mirrors ROADMAP.md's verify line exactly; any extra args are passed
 # through to pytest (e.g. scripts/check.sh -k serving).
 set -euo pipefail
 cd "$(dirname "$0")/.."
-PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} exec python -m pytest -x -q "$@"
+ARGS=()
+for a in "$@"; do
+  if [ "$a" = "--fast" ]; then
+    ARGS+=(-m "not slow")
+  else
+    ARGS+=("$a")
+  fi
+done
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+  exec python -m pytest -x -q ${ARGS+"${ARGS[@]}"}

@@ -85,6 +85,27 @@ def _qk_feature_pair(q, k, fparams, cfg: fm.FeatureConfig):
     return qf, kf, kc
 
 
+def _resume_qk_features(qs, ks, fparams, cfg: fm.FeatureConfig, c_in):
+    """Feature pair against the RUNNING k-stabilizer carried in ``c_in``
+    (see module docstring): the new max folds the incoming one, and the
+    carried (S, z) must be scaled by ``rescale = exp(c_in - c_new)``.
+    The shared core of one-token decode and resumed chunk prefill.
+    Returns (qf, kf, c_new, rescale)."""
+    inv_sqrt_m = cfg.num_features ** -0.5
+    qraw = _raw_logits(qs, fparams, cfg.kind)
+    kraw = _raw_logits(ks, fparams, cfg.kind)
+    qf = jnp.exp(qraw - _stab_max(qraw, cfg.stabilize)) * inv_sqrt_m
+    if cfg.stabilize:
+        c_new = jnp.maximum(c_in, _stab_max(kraw, True))
+    else:
+        # unstabilized features carry c == 0 (the init state's -inf
+        # sentinel only ever zeroes an all-zero fresh state)
+        c_new = jnp.zeros_like(c_in)
+    rescale = jnp.exp(c_in - c_new)                    # <= 1
+    kf = jnp.exp(kraw - c_new) * inv_sqrt_m
+    return qf, kf, c_new, rescale
+
+
 def rf_attention(q: Array, k: Array, v: Array, fparams: Optional[dict],
                  cfg: fm.FeatureConfig, *, causal: bool = True,
                  window: Optional[int] = None, chunk: int = 256,
@@ -136,15 +157,63 @@ class AttnServeState(NamedTuple):
     c: Optional[Array] = None               # (B, G, 1, 1, 1)   f32
 
 
+def _exact_prefill_resume(qs, ks, v, state: AttnServeState,
+                          window: Optional[int], out_dtype):
+    """Append an l-token chunk to the exact KV cache and attend the chunk
+    queries over the whole valid prefix. ``state.length`` is () or (B,)
+    — the multi-token generalization of ``_exact_decode``."""
+    l = qs.shape[-2]
+    idx = state.length
+    if idx.ndim == 0:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            state.kv_k, ks[:, :, 0], idx, axis=2)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            state.kv_v, v[:, :, 0], idx, axis=2)
+        qpos = idx + jnp.arange(l)                       # (l,) absolute
+        qpos_b = qpos[None]                              # (1, l)
+    else:
+        write = jax.vmap(
+            lambda cache, new, i: jax.lax.dynamic_update_slice_in_dim(
+                cache, new, i, axis=1))
+        kc = write(state.kv_k, ks[:, :, 0], idx)
+        vc = write(state.kv_v, v[:, :, 0], idx)
+        qpos_b = idx[:, None] + jnp.arange(l)[None]      # (B, l)
+    lmax = kc.shape[2]
+    kpos = jnp.arange(lmax)
+    valid = kpos[None, None, :] <= qpos_b[:, :, None]    # (B|1, l, lmax)
+    if window is not None:
+        valid &= kpos[None, None, :] > qpos_b[:, :, None] - window
+    vmask = valid[:, None, None]                         # (B|1,1,1,l,lmax)
+    logits = jnp.einsum("bghqd,bgkd->bghqk", qs, kc).astype(jnp.float32)
+    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(out_dtype)
+    return out, state._replace(kv_k=kc, kv_v=vc, length=idx + l)
+
+
 def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
                          window: Optional[int] = None, chunk: int = 256,
                          max_len: Optional[int] = None,
-                         use_kernel: bool = False):
-    """Prefill: full causal pass over the prompt + serving state."""
+                         use_kernel: bool = False,
+                         state: Optional[AttnServeState] = None):
+    """Causal pass over a prompt (chunk) + advanced serving state.
+
+    ``state=None`` is the legacy whole-prompt entry point: the serving
+    state is built from scratch and the k-stabilizer is one max over the
+    whole prompt. With an incoming ``state`` the pass *resumes*: the
+    chunk attends to the carried prefix, and the stabilizer becomes a
+    running max with an online exp(c_old - c_new) rescale of (S, z) —
+    the multi-token generalization of ``rf_attention_decode``, so a
+    prompt split into chunks reproduces the whole-prompt pass to f32
+    rounding (bit-exact only when the whole prompt is one chunk from a
+    fresh state, which fixes the stabilizer trajectory).
+    """
     b, g, hg, l, _ = q.shape
     dv = v.shape[-1]
     if cfg.kind == "exact":
         qs, ks = _scale_qk(q, k)
+        if state is not None:
+            return _exact_prefill_resume(qs, ks, v, state, window, v.dtype)
         out = la.exact_attention(qs, ks, v, causal=True, window=window)
         lmax = max_len or l
         kc = jnp.pad(ks[:, :, 0], ((0, 0), (0, 0), (0, lmax - l), (0, 0)))
@@ -152,20 +221,40 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
         state = AttnServeState(kv_k=kc, kv_v=vc,
                                length=jnp.full((), l, jnp.int32))
         return out, state
+
     qs, ks = _scale_qk(q, k)
-    qf, kf, kc = _qk_feature_pair(qs, ks, fparams, cfg)
+    if state is None:
+        qf, kf, kc = _qk_feature_pair(qs, ks, fparams, cfg)
+        kfb = jnp.broadcast_to(kf, (b, g, hg, l, cfg.num_features))
+        vv = jnp.broadcast_to(v, (b, g, hg, l, dv))
+        if use_kernel:
+            from repro.kernels import ops as kops
+            out = kops.linear_attention_causal(qf, kfb, vv, eps=cfg.eps)
+        else:
+            out = la.linear_attention_causal_chunked(qf, kfb, vv,
+                                                     chunk=chunk,
+                                                     eps=cfg.eps)
+        s = jnp.einsum("bghlm,bghld->bghmd", kfb.astype(jnp.float32),
+                       vv.astype(jnp.float32))
+        z = jnp.sum(kfb.astype(jnp.float32), axis=-2)
+        return out, AttnServeState(s=s, z=z, c=kc)
+
+    # resume: online rescale of the k stabilizer, then the carried-state
+    # chunked scan.
+    qf, kf, c_new, rescale = _resume_qk_features(qs, ks, fparams, cfg,
+                                                 state.c)
     kfb = jnp.broadcast_to(kf, (b, g, hg, l, cfg.num_features))
     vv = jnp.broadcast_to(v, (b, g, hg, l, dv))
+    s0 = state.s * rescale
+    z0 = state.z * rescale[..., 0]
     if use_kernel:
         from repro.kernels import ops as kops
-        out = kops.linear_attention_causal(qf, kfb, vv, eps=cfg.eps)
+        out, s, z = kops.linear_attention_prefill_chunk(
+            qf, kfb, vv, s0, z0, chunk=chunk, eps=cfg.eps)
     else:
-        out = la.linear_attention_causal_chunked(qf, kfb, vv, chunk=chunk,
-                                                 eps=cfg.eps)
-    s = jnp.einsum("bghlm,bghld->bghmd", kfb.astype(jnp.float32),
-                   vv.astype(jnp.float32))
-    z = jnp.sum(kfb.astype(jnp.float32), axis=-2)
-    return out, AttnServeState(s=s, z=z, c=kc)
+        out, s, z = la.linear_attention_causal_carry(
+            qf, kfb, vv, s0, z0, chunk=chunk, eps=cfg.eps)
+    return out, AttnServeState(s=s, z=z, c=c_new)
 
 
 def init_linear_serve_state(b, g, hg, m, dv) -> AttnServeState:
@@ -181,37 +270,11 @@ def _exact_decode(qs, ks, v, state: AttnServeState,
 
     With a (B,) ``length`` every batch row (= serving slot) appends its
     key/value at its own position and masks its own valid prefix — the
-    per-slot page write of the continuous-batching engine.
+    per-slot page write of the continuous-batching engine. Exactly the
+    l=1 case of the resumable prefill chunk, so there is one copy of the
+    cache-write + prefix-mask + masked-softmax contract.
     """
-    idx = state.length
-    if idx.ndim == 0:
-        kc = jax.lax.dynamic_update_slice_in_dim(
-            state.kv_k, ks[:, :, 0], idx, axis=2)
-        vc = jax.lax.dynamic_update_slice_in_dim(
-            state.kv_v, v[:, :, 0], idx, axis=2)
-    else:
-        write = jax.vmap(
-            lambda cache, new, i: jax.lax.dynamic_update_slice_in_dim(
-                cache, new, i, axis=1))
-        kc = write(state.kv_k, ks[:, :, 0], idx)
-        vc = write(state.kv_v, v[:, :, 0], idx)
-    lmax = kc.shape[2]
-    pos = jnp.arange(lmax)
-    if idx.ndim == 0:
-        valid = pos <= idx
-        if window is not None:
-            valid &= pos > idx - window
-        vmask = valid[None, None, None, None, :]
-    else:
-        valid = pos[None, :] <= idx[:, None]            # (B, lmax)
-        if window is not None:
-            valid &= pos[None, :] > (idx[:, None] - window)
-        vmask = valid[:, None, None, None, :]
-    logits = jnp.einsum("bghqd,bgkd->bghqk", qs, kc).astype(jnp.float32)
-    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
-    probs = jax.nn.softmax(logits, axis=-1)
-    out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(out_dtype)
-    return out, state._replace(kv_k=kc, kv_v=vc, length=idx + 1)
+    return _exact_prefill_resume(qs, ks, v, state, window, out_dtype)
 
 
 def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
@@ -232,17 +295,10 @@ def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
         return _exact_decode(qs, ks, v, state, window, v.dtype)
 
     qs, ks = _scale_qk(q, k)
-    inv_sqrt_m = cfg.num_features ** -0.5
-    qraw = _raw_logits(qs, fparams, cfg.kind)      # (B,G,Hg,1,m)
-    kraw = _raw_logits(ks, fparams, cfg.kind)      # (B,G,1,1,m)
-    # q scale cancels per step; use a local max.
-    qf = jnp.exp(qraw - _stab_max(qraw, cfg.stabilize)) * inv_sqrt_m
-    # Online rescale of the k stabilizer (see module docstring).
-    k_max = jnp.max(kraw, axis=(-3, -2, -1), keepdims=True)  # (B,G,1,1,1)
-    c_new = jnp.maximum(state.c, jax.lax.stop_gradient(k_max)) \
-        if cfg.stabilize else state.c
-    rescale = jnp.exp(state.c - c_new)             # <= 1
-    kf = jnp.exp(kraw - c_new) * inv_sqrt_m        # (B,G,1,1,m)
+    # Online rescale of the k stabilizer — shared with the resumed
+    # prefill chunk (decode is its one-token case).
+    qf, kf, c_new, rescale = _resume_qk_features(qs, ks, fparams, cfg,
+                                                 state.c)
     kfb = jnp.broadcast_to(kf[:, :, :, 0], (b, g, hg, cfg.num_features))
     vv = jnp.broadcast_to(v[:, :, :, 0], (b, g, hg, dv))
     qf1 = qf[..., 0, :]                            # (B,G,Hg,m)

@@ -104,15 +104,22 @@ def linear_attention_causal_naive(qf: Array, kf: Array, v: Array,
     return (num / (den + eps)).astype(v.dtype)
 
 
-def linear_attention_causal_chunked(qf: Array, kf: Array, v: Array,
-                                    chunk: int = 256,
-                                    eps: float = 1e-6) -> Array:
-    """Chunked prefix-state causal linear attention, O(L m d).
+def linear_attention_causal_carry(qf: Array, kf: Array, v: Array,
+                                  s0: Optional[Array] = None,
+                                  z0: Optional[Array] = None, *,
+                                  chunk: int = 256, eps: float = 1e-6
+                                  ) -> tuple[Array, Array, Array]:
+    """Chunked prefix-state causal linear attention from a carried state.
 
     The pure-jnp oracle mirroring the Pallas kernel's blocking:
       per chunk c:   out_c = Q'_c S_in + tril(Q'_c K'_c^T) V_c
                      den_c = Q'_c z_in + tril(Q'_c K'_c^T) 1
                      S_out = S_in + K'_c^T V_c ;  z_out = z_in + sum K'_c
+    ``s0`` (..., m, dv) / ``z0`` (..., m) seed the scan (zeros when None,
+    i.e. a fresh sequence); every position attends to the carried prefix
+    plus its own causal chunk — which is what makes prefill *resumable*:
+    the state after k tokens is a valid entry point for the next chunk.
+    Returns (out, s_final, z_final); out in v.dtype, state in f32.
     """
     *batch, l, m = qf.shape
     dv = v.shape[-1]
@@ -139,16 +146,29 @@ def linear_attention_causal_chunked(qf: Array, kf: Array, v: Array,
         z = z + jnp.sum(kb, axis=-2)
         return (s, z), (num, den)
 
-    s0 = jnp.zeros((*batch, m, dv), jnp.float32)
-    z0 = jnp.zeros((*batch, m), jnp.float32)
+    if s0 is None:
+        s0 = jnp.zeros((*batch, m, dv), jnp.float32)
+    if z0 is None:
+        z0 = jnp.zeros((*batch, m), jnp.float32)
+    s0 = jnp.broadcast_to(s0.astype(jnp.float32), (*batch, m, dv))
+    z0 = jnp.broadcast_to(z0.astype(jnp.float32), (*batch, m))
     qs = jnp.moveaxis(qc, len(batch), 0)
     ks = jnp.moveaxis(kc, len(batch), 0)
     vs = jnp.moveaxis(vc, len(batch), 0)
-    _, (nums, dens) = jax.lax.scan(step, (s0, z0), (qs, ks, vs))
+    (s_f, z_f), (nums, dens) = jax.lax.scan(step, (s0, z0), (qs, ks, vs))
     nums = jnp.moveaxis(nums, 0, len(batch)).reshape(*batch, lp, dv)
     dens = jnp.moveaxis(dens, 0, len(batch)).reshape(*batch, lp)
     out = nums / (dens[..., None] + eps)
-    return out[..., :l, :].astype(v.dtype)
+    return out[..., :l, :].astype(v.dtype), s_f, z_f
+
+
+def linear_attention_causal_chunked(qf: Array, kf: Array, v: Array,
+                                    chunk: int = 256,
+                                    eps: float = 1e-6) -> Array:
+    """Fresh-sequence (zero initial state) chunked causal linear attention."""
+    out, _, _ = linear_attention_causal_carry(qf, kf, v, chunk=chunk,
+                                              eps=eps)
+    return out
 
 
 class LinearState(NamedTuple):

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.linear_attn_scan import linear_attention_causal_fwd
+from repro.kernels.linear_attn_scan import (linear_attention_causal_fwd,
+                                            linear_attention_causal_carry_fwd)
 from repro.kernels.prf_featmap import prf_featmap_fwd
 
 Array = jax.Array
@@ -67,6 +68,30 @@ def linear_attention_causal(qf: Array, kf: Array, v: Array, *,
     """Causal PRF attention via the Pallas scan kernel. (..., L, m) x
     (..., L, dv) -> (..., L, dv); differentiable (oracle-VJP backward)."""
     return _lin_attn(qf, kf, v, chunk, eps)
+
+
+def linear_attention_prefill_chunk(qf: Array, kf: Array, v: Array,
+                                   s: Array, z: Array, *,
+                                   chunk: int = 256, eps: float = 1e-6
+                                   ) -> tuple[Array, Array, Array]:
+    """Advance a PRF prefix state over a prompt chunk via the Pallas scan.
+
+    qf, kf: (..., L, m); v: (..., L, dv); s: (..., m, dv); z: (..., m) —
+    leading dims are independent (batch, group, head) rows and get
+    flattened. Forward-only (serving-side chunked prefill; no VJP).
+    Returns (out (..., L, dv), s_new, z_new); state in f32.
+    """
+    lead = qf.shape[:-2]
+    l, m = qf.shape[-2:]
+    dv = v.shape[-1]
+    out, s_new, z_new = linear_attention_causal_carry_fwd(
+        qf.reshape(-1, l, m), kf.reshape(-1, l, m), v.reshape(-1, l, dv),
+        jnp.broadcast_to(s, (*lead, m, dv)).reshape(-1, m, dv)
+        .astype(jnp.float32),
+        jnp.broadcast_to(z, (*lead, m)).reshape(-1, m).astype(jnp.float32),
+        chunk=chunk, eps=eps, interpret=_use_interpret())
+    return (out.reshape(*lead, l, dv), s_new.reshape(*lead, m, dv),
+            z_new.reshape(*lead, m))
 
 
 # ---------------------------------------------------------------------------

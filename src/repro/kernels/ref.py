@@ -38,6 +38,26 @@ def prf_featmap_ref(x: Array, m_mat: Array | None, w: Array,
     return jnp.exp(logits - sq - c) * (m ** -0.5)
 
 
+def linear_attention_carry_ref(qf: Array, kf: Array, v: Array,
+                               s0: Array, z0: Array, eps: float = 1e-6):
+    """Causal linear attention resumed from a prefix state — O(L^2) masked
+    oracle for the carry kernel. qf, kf: (N, L, m); v: (N, L, dv);
+    s0: (N, m, dv); z0: (N, m). Returns (out, s_new, z_new)."""
+    f32 = jnp.float32
+    qf, kf, v, s0, z0 = (t.astype(f32) for t in (qf, kf, v, s0, z0))
+    scores = jnp.einsum("nqm,nkm->nqk", qf, kf)
+    l = qf.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), dtype=bool))
+    scores = jnp.where(mask[None], scores, 0.0)
+    num = jnp.einsum("nqm,nmd->nqd", qf, s0) + jnp.einsum(
+        "nqk,nkd->nqd", scores, v)
+    den = (jnp.einsum("nqm,nm->nq", qf, z0)
+           + jnp.sum(scores, axis=-1))[..., None]
+    s_new = s0 + jnp.einsum("nlm,nld->nmd", kf, v)
+    z_new = z0 + jnp.sum(kf, axis=1)
+    return num / (den + eps), s_new, z_new
+
+
 def prf_decode_step_ref(qf: Array, kf: Array, v: Array, s: Array,
                         z: Array, rescale: Array, eps: float = 1e-6):
     """One-token PRF decode oracle. qf, kf, z: (N, m); v: (N, dv);

@@ -59,12 +59,17 @@ def main():
                     help="Poisson arrival rate (req/s); 0 = all at t=0")
     ap.add_argument("--realtime", action="store_true",
                     help="sleep through arrival gaps instead of skipping")
-    ap.add_argument("--prefill-bucket", type=int, default=None,
-                    help="bucket prompt prefills to multiples of N "
-                         "(caps compile count; tail fed via decode)")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill: spend at most N prompt tokens "
+                         "per engine step so admissions interleave with "
+                         "decode (default: blocking whole-prompt prefill)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route prefill/decode through the Pallas kernels")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="per-request top-k sampling (0 = off)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="per-request nucleus sampling (1.0 = off)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--load", default=None, help="checkpoint dir")
     ap.add_argument("--mesh-data", type=int, default=1)
@@ -96,12 +101,13 @@ def main():
 
     engine = ServingEngine(params, cfg, max_slots=args.slots,
                            max_len=args.max_len,
-                           prefill_bucket=args.prefill_bucket,
+                           chunk_tokens=args.chunk_tokens,
                            seed=args.seed)
     reqs = synthetic_requests(
         args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
         prompt_range=_parse_range(args.prompt_len),
-        gen_range=_parse_range(args.gen), temperature=args.temperature)
+        gen_range=_parse_range(args.gen), temperature=args.temperature,
+        top_k=args.top_k, top_p=args.top_p)
     try:
         for r in reqs:
             engine.submit(r)
@@ -134,6 +140,9 @@ def main():
               f"p99={np.percentile(ttfts, 99) * 1e3:.0f}ms")
     print(f"slot occupancy: {st['mean_occupancy'] * 100:.0f}% over "
           f"{st['decode_steps']} decode steps")
+    print(f"prefill: {st['prefill_tokens']} tokens in "
+          f"{st['prefill_chunks']} chunks "
+          f"(max {st['max_prefill_tokens_per_step']} per step)")
 
 
 if __name__ == "__main__":

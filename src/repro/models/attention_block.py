@@ -84,14 +84,27 @@ def attn_apply(params: dict, x: Array, cfg: fm.FeatureConfig, *,
 
 def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
                  window=None, qk_norm=False, rope_theta=10000.0,
-                 max_len=None, use_kernel=False):
+                 max_len=None, use_kernel=False, state=None,
+                 position=None):
+    """Prefill one prompt chunk. ``state=None`` + ``position=None`` is the
+    legacy whole-prompt call; with an incoming serve ``state`` and a chunk
+    start ``position`` (() int32, or (B,) per-slot starts) the pass
+    resumes: RoPE rotates at absolute positions and the attention state
+    advances from where the previous chunk left it."""
     l = x.shape[1]
-    positions = jnp.arange(l)
+    if position is None:
+        positions = jnp.arange(l)
+    elif position.ndim == 0:
+        positions = position + jnp.arange(l)
+    else:                      # (B,) per-row starts -> (B, 1, 1, L)
+        b = x.shape[0]
+        positions = (position[:, None]
+                     + jnp.arange(l)[None]).reshape(b, 1, 1, l)
     q, k, v = _project(params, x, n_heads, n_kv, d_head, qk_norm,
                        positions, rope_theta)
     out, state = rfa.rf_attention_prefill(
         q, k, v, params.get("feat"), cfg, window=window,
-        max_len=max_len, use_kernel=use_kernel)
+        max_len=max_len, use_kernel=use_kernel, state=state)
     return _merge_heads(out, params), state
 
 

@@ -176,9 +176,13 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
                                 window=window, use_kernel=cfg.use_kernel,
                                 baseline_key=layer_key, **common)
         elif mode == "prefill":
+            # state is the block's incoming serve state; position the
+            # chunk's start offset — prefill is a resumable multi-token
+            # step, exactly parallel to decode.
             mix, new_state = ab.attn_prefill(
                 params["attn"], h, cfg.attn, window=window,
-                max_len=state, use_kernel=cfg.use_kernel, **common)
+                state=state, position=position,
+                use_kernel=cfg.use_kernel, **common)
         else:  # decode
             mix, new_state = ab.attn_decode(
                 params["attn"], h, state, cfg.attn, position=position,
@@ -193,9 +197,7 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
     elif kind == "rec":
         if mode == "train":
             mix, _ = rec.rglru_apply(params["rec"], h, None)
-        elif mode == "prefill":
-            mix, new_state = rec.rglru_apply(params["rec"], h, None)
-        else:
+        else:                       # prefill chunk / decode: carry state
             mix, new_state = rec.rglru_apply(params["rec"], h, state)
         x = x + mix
         h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
@@ -211,8 +213,8 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
             h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
             f, _ = rec.rwkv6_channel_mix(params["cmix"], h2, None)
             x = x + f
-        else:
-            tstate, cshift = (None, None) if mode == "prefill" else state
+        else:                       # prefill chunk / decode: carry state
+            tstate, cshift = state
             mix, tstate = rec.rwkv6_apply(params["tmix"], h, cfg.n_heads,
                                           tstate)
             x = x + mix
@@ -435,44 +437,73 @@ def init_serve_state(cfg: ModelConfig, b: int, max_len: int,
     return state
 
 
-def prefill(params, cfg: ModelConfig, batch: dict, max_len: int
-            ) -> tuple[Array, dict]:
-    """Full-prompt pass; returns (last-position logits, serve state)."""
-    x = _embed_inputs(params, cfg, batch)
-    state: dict[str, Any] = {}
+def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict
+                  ) -> tuple[Array, dict]:
+    """Advance a serve state over one prompt chunk.
 
-    def unit_body(x, unit_params):
-        states = {}
+    ``state`` is a serve state from :func:`init_serve_state` (fresh) or a
+    previous ``prefill_chunk`` call — its ``pos`` (() or (B,) int32) is
+    the chunk's start offset, threaded to every layer (RoPE rotations,
+    exact-cache write indices, recurrent carries). Returns
+    (last-position logits (B, V), advanced state). This is the resume
+    point the chunked-prefill scheduler interleaves with decode steps
+    (repro/serving/engine.py); whole-prompt :func:`prefill` is the
+    degenerate one-chunk schedule.
+    """
+    x = _embed_inputs(params, cfg, batch)
+    pos = state["pos"]
+    new_state: dict[str, Any] = {"pos": pos + x.shape[1]}
+
+    def unit_body(x, xs):
+        unit_params, unit_state = xs
+        new_states = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, _, st = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
-                                    layer_key=None, state=max_len,
-                                    mode="prefill")
-            states[f"b{i}"] = st
-        return x, states
+                                    layer_key=None,
+                                    state=unit_state[f"b{i}"],
+                                    mode="prefill", position=pos)
+            new_states[f"b{i}"] = st
+        return x, new_states
 
     if cfg.n_units > 0:
         if cfg.scan_layers:
-            x, unit_states = jax.lax.scan(unit_body, x, params["units"])
-            state["units"] = unit_states
+            x, unit_states = jax.lax.scan(
+                unit_body, x, (params["units"], state["units"]))
+            new_state["units"] = unit_states
         else:
             per_unit = []
             for u in range(cfg.n_units):
-                up = jax.tree_util.tree_map(lambda a: a[u],
-                                            params["units"])
-                x, st_u = unit_body(x, up)
+                sl = jax.tree_util.tree_map(lambda a: a[u],
+                                            (params["units"],
+                                             state["units"]))
+                x, st_u = unit_body(x, sl)
                 per_unit.append(st_u)
-            state["units"] = jax.tree_util.tree_map(
+            new_state["units"] = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *per_unit)
     if cfg.n_rem:
-        state["rem"] = []
+        new_state["rem"] = []
         for i in range(cfg.n_rem):
             kind = cfg.block_pattern[i % len(cfg.block_pattern)]
             x, _, st = _apply_block(params["rem"][i], x, cfg, kind,
-                                    layer_key=None, state=max_len,
-                                    mode="prefill")
-            state["rem"].append(st)
-    state["pos"] = jnp.asarray(x.shape[1], jnp.int32)
-    return _logits(params, cfg, x[:, -1:]), state
+                                    layer_key=None, state=state["rem"][i],
+                                    mode="prefill", position=pos)
+            new_state["rem"].append(st)
+    return _logits(params, cfg, x[:, -1:])[:, 0], new_state
+
+
+def prefill(params, cfg: ModelConfig, batch: dict, max_len: int
+            ) -> tuple[Array, dict]:
+    """Full-prompt pass; returns ((B, 1, V) last logits, serve state).
+
+    One whole-prompt ``prefill_chunk`` from a fresh serve state — the
+    degenerate chunking schedule, so chunked and blocking admission share
+    a single mechanism.
+    """
+    b = (batch["frames"] if cfg.modality == "audio"
+         else batch["tokens"]).shape[0]
+    state = init_serve_state(cfg, b=b, max_len=max_len)
+    logits, state = prefill_chunk(params, cfg, batch, state)
+    return logits[:, None], state
 
 
 def decode_step(params, cfg: ModelConfig, token: Array, state: dict

@@ -4,34 +4,44 @@ The paper's serving claim (docs/serving.md) is that PRF attention decodes
 from a fixed-size running state — an (m x d_v) sum S, an (m,) normalizer
 z and the running stabilizer max c per head — so a server can multiplex
 many users over one batched decode step regardless of how long each
-context is. This engine is that multiplexer:
+context is. The same state is what makes prefill *chunkable*: the state
+after k prompt tokens is a valid resume point (``lm.prefill_chunk``), so
+prompt work can be cut into budgeted slices instead of monopolizing the
+device. This engine is that multiplexer:
 
   * a FIFO **request queue** with arrival times (Poisson traffic plugs in
     here — see benchmarks/serve_latency.py);
   * a device-resident **slot pool**: one serve-state pytree with
     ``max_slots`` batch rows, per-slot positions and (for the exact
     fallback) per-slot KV write indices (repro/serving/slots.py);
-  * a **scheduler** that admits a queued request into any free slot by
-    prefilling it as a B=1 sequence and scattering the resulting state
-    into the pool, and evicts a slot the moment its sequence finishes —
-    both mid-decode, without touching other slots;
+  * a **token-budgeted scheduler**: each ``step()`` spends at most
+    ``chunk_tokens`` prompt tokens on ONE admission's next chunk (the
+    admission keeps a per-slot prefill cursor and an off-pool staging
+    state), then runs one batched decode step for all active slots — so
+    a long prompt is amortized across decode steps instead of stalling
+    them. ``chunk_tokens=None`` is the blocking baseline: whole prompts
+    are prefilled at admission (the degenerate one-chunk schedule);
   * one jitted **batched decode step** that advances all slots in
     lock-step; inactive slots are masked so their state stays bit-frozen.
+    A mid-prefill slot's state lives OFF the pool until its last chunk
+    lands, so partial prefills never perturb pool rows.
 
 Numerical contract: slot rows are computed elementwise over the batch
 axis, so a sequence decoded inside a busy heterogeneous batch produces
 bit-identical f32 logits to the same sequence decoded alone with
 ``lm.prefill`` + ``lm.decode_step`` (tests/test_serving_engine.py
-asserts this for darkformer, performer and exact kernels).
+asserts this for darkformer, performer and exact kernels). Chunking a
+prompt changes the k-stabilizer trajectory (a running max instead of one
+whole-prompt max), so chunked admission matches blocking admission to
+f32 rounding — and bit-exactly when ``chunk_tokens >= prompt_len``
+(tests/test_chunked_prefill.py).
 
-Prefill compiles once per distinct prompt length. Setting
-``prefill_bucket=N`` caps that at one compile per multiple of N: the
-prompt head (largest multiple of N) is prefills and the remaining tail
-tokens are fed through the single-sequence decode path before the state
-is scattered into the pool. Bucketed admission changes the k-stabilizer
-trajectory (a running max instead of one whole-prompt max), so outputs
-match the unbucketed path only up to f32 rounding — leave it off when
-bit-exactness matters more than compile count.
+Prefill compiles once per distinct chunk length, so ``chunk_tokens=N``
+also caps compiles at one per residual length < N plus the full chunk.
+
+Sampling: per-request ``temperature`` / ``top_k`` / ``top_p`` are applied
+inside one jitted batched sample step; the defaults (0 / 0 / 1.0) leave
+the greedy path bit-identical to plain argmax.
 """
 from __future__ import annotations
 
@@ -51,14 +61,23 @@ Array = jax.Array
 
 
 class _Slot:
-    """Host-side record of the sequence occupying one pool row."""
+    """Host-side record of the sequence occupying one pool row.
 
-    __slots__ = ("req", "result", "budget")
+    A slot is *prefilling* while ``cursor < len(req.prompt)`` — its
+    attention state is the off-pool B=1 ``state`` pytree and it takes no
+    part in decode. Once the last chunk lands the state is scattered
+    into the pool, ``state`` drops to None and the slot decodes.
+    """
 
-    def __init__(self, req: Request, result: RequestResult, budget: int):
+    __slots__ = ("req", "result", "budget", "cursor", "state")
+
+    def __init__(self, req: Request, result: RequestResult, budget: int,
+                 state):
         self.req = req
         self.result = result
         self.budget = budget
+        self.cursor = 0
+        self.state = state
 
 
 class ServingEngine:
@@ -66,40 +85,48 @@ class ServingEngine:
 
     Typical use::
 
-        eng = ServingEngine(params, cfg, max_slots=8, max_len=512)
+        eng = ServingEngine(params, cfg, max_slots=8, max_len=512,
+                            chunk_tokens=64)
         eng.submit(Request(prompt=[...], max_new_tokens=64))
         results = eng.run()
 
-    or drive it step-by-step (one batched decode per ``step()``) and
-    ``submit`` more requests while others are mid-decode.
+    or drive it step-by-step (one prefill chunk + one batched decode per
+    ``step()``) and ``submit`` more requests while others are mid-decode.
     """
 
     def __init__(self, params, cfg: lm.ModelConfig, *, max_slots: int = 4,
-                 max_len: int = 256, prefill_bucket: Optional[int] = None,
+                 max_len: int = 256, chunk_tokens: Optional[int] = None,
                  seed: int = 0):
         if cfg.modality != "text":
             raise ValueError("serving engine drives text decode only")
-        if prefill_bucket is not None and prefill_bucket < 1:
-            raise ValueError("prefill_bucket must be >= 1")
+        if chunk_tokens is not None and chunk_tokens < 1:
+            raise ValueError("chunk_tokens must be >= 1")
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
-        self.prefill_bucket = prefill_bucket
+        self.chunk_tokens = chunk_tokens
         self.pool = lm.init_serve_state(cfg, b=max_slots, max_len=max_len,
                                         per_slot=True)
+        # immutable template scattered per admission; every prefill chain
+        # starts from this fresh B=1 state
+        self._fresh = lm.init_serve_state(cfg, b=1, max_len=max_len)
 
         self._slots: list[Optional[_Slot]] = [None] * max_slots
         self._active = np.zeros(max_slots, bool)
         self._temps = np.zeros(max_slots, np.float32)
+        self._top_ks = np.zeros(max_slots, np.int32)
+        self._top_ps = np.ones(max_slots, np.float32)
         self._toks = np.zeros(max_slots, np.int32)
+        self._prefill_order: list[int] = []    # slot idx, admission FIFO
         self._queue: list[Request] = []        # sorted by arrival_time
         self._key = jax.random.PRNGKey(seed)
         self._step_count = 0
         self._t0: Optional[float] = None
         self._stats = {"decode_steps": 0, "decode_slot_steps": 0,
-                       "prefill_tokens": 0, "emitted_tokens": 0,
-                       "admitted": 0, "finished": 0}
+                       "prefill_tokens": 0, "prefill_chunks": 0,
+                       "max_prefill_tokens_per_step": 0,
+                       "emitted_tokens": 0, "admitted": 0, "finished": 0}
 
         cfg_ = cfg  # closed over by the jitted steps
 
@@ -107,30 +134,51 @@ class ServingEngine:
             logits, new = lm.decode_step(params, cfg_, toks, pool)
             return logits, slot_ops.freeze_inactive(pool, new, active)
 
-        def _prefill(params, tokens):
-            logits, st = lm.prefill(params, cfg_, {"tokens": tokens},
-                                    max_len=max_len)
-            return logits[:, -1], st           # (1, V), state
-
-        def _decode_b1(params, tok, st):
-            return lm.decode_step(params, cfg_, tok, st)
+        def _prefill_chunk(params, tokens, state):
+            # (1, V) last-chunk-position logits + advanced B=1 state
+            return lm.prefill_chunk(params, cfg_, {"tokens": tokens},
+                                    state)
 
         def _write(pool, st, idx):
             return slot_ops.write_slot(pool, st, idx)
 
-        def _sample(key, logits, temps):
+        def _sample_plain(key, logits, temps):
+            # greedy / plain-temperature rows only: skips the two
+            # full-vocab sorts of the top-k/p masks on the hot loop
             greedy = jnp.argmax(logits, axis=-1)
             scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
             drawn = jax.random.categorical(key, scaled, axis=-1)
             return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
 
+        def _sample(key, logits, temps, top_ks, top_ps):
+            v = logits.shape[-1]
+            greedy = jnp.argmax(logits, axis=-1)
+            scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
+            # per-row top-k: drop logits below the k-th largest
+            # (top_k <= 0 disables; the mask is then all-True)
+            desc = jnp.sort(scaled, axis=-1)[:, ::-1]
+            kidx = jnp.clip(jnp.where(top_ks > 0, top_ks, v) - 1, 0, v - 1)
+            kth = jnp.take_along_axis(desc, kidx[:, None], axis=-1)
+            masked = jnp.where(scaled >= kth, scaled, -jnp.inf)
+            # per-row nucleus: keep the smallest prefix of probability
+            # mass >= top_p (top_p >= 1 disables)
+            probs = jax.nn.softmax(masked, axis=-1)
+            sp = jnp.sort(probs, axis=-1)[:, ::-1]
+            cum = jnp.cumsum(sp, axis=-1)
+            keep = ((cum - sp) < top_ps[:, None]) | (top_ps[:, None] >= 1.0)
+            cutoff = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1,
+                             keepdims=True)
+            masked = jnp.where(probs >= cutoff, masked, -jnp.inf)
+            drawn = jax.random.categorical(key, masked, axis=-1)
+            return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
+
         self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
-        self._decode_b1_fn = jax.jit(_decode_b1)
         self._write_fn = jax.jit(_write, donate_argnums=(0,))
         self._sample_fn = jax.jit(_sample)
-        # one jit wrapper; XLA caches one executable per prompt length
-        # (prefill_bucket caps the number of distinct lengths)
-        self._prefill_fn = jax.jit(_prefill)
+        self._sample_plain_fn = jax.jit(_sample_plain)
+        # one jit wrapper; XLA caches one executable per chunk length
+        # (chunk_tokens caps the number of distinct lengths)
+        self._prefill_chunk_fn = jax.jit(_prefill_chunk)
 
     # -- clock ------------------------------------------------------------
 
@@ -153,12 +201,20 @@ class ServingEngine:
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (admission "
                              "always samples the first token)")
+        if req.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if req.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if req.top_p <= 0:
+            # top_p <= 0 would mask EVERY token to -inf and the row
+            # would silently stream token 0
+            raise ValueError("top_p must be > 0 (>= 1.0 disables)")
         bisect.insort(self._queue, req, key=lambda r: r.arrival_time)
         return req.uid
 
     def cancel(self, uid: int) -> Optional[RequestResult]:
-        """Evict a queued or mid-decode request. Returns its partial
-        result (None if the uid is unknown)."""
+        """Evict a queued, mid-prefill or mid-decode request. Returns its
+        partial result (None if the uid is unknown)."""
         for i, req in enumerate(self._queue):
             if req.uid == uid:
                 self._queue.pop(i)
@@ -179,8 +235,12 @@ class ServingEngine:
         return int(self._active.sum())
 
     @property
+    def num_prefilling(self) -> int:
+        return len(self._prefill_order)
+
+    @property
     def has_work(self) -> bool:
-        return bool(self._queue) or self.num_active > 0
+        return bool(self._queue) or any(s is not None for s in self._slots)
 
     def next_arrival(self) -> Optional[float]:
         return self._queue[0].arrival_time if self._queue else None
@@ -191,62 +251,112 @@ class ServingEngine:
         self._slots[i] = None
         self._active[i] = False
         self._temps[i] = 0.0
+        self._top_ks[i] = 0
+        self._top_ps[i] = 1.0
+        if i in self._prefill_order:
+            self._prefill_order.remove(i)
 
     def _sample_one(self, req: Request, logits_row: Array) -> int:
         key = jax.random.fold_in(
             jax.random.fold_in(self._key, req.uid), self._step_count)
         temps = jnp.full((1,), req.temperature, jnp.float32)
-        return int(self._sample_fn(key, logits_row, temps)[0])
-
-    def _admit(self, req: Request, slot: int) -> None:
-        prompt = np.asarray(req.prompt, np.int32)
-        length = len(prompt)
-        if self.prefill_bucket and length > self.prefill_bucket:
-            head = (length // self.prefill_bucket) * self.prefill_bucket
-        else:
-            head = length
-        logits, st = self._prefill_fn(
-            self.params, jnp.asarray(prompt[None, :head]))
-        for j in range(head, length):          # decode-tail admission
-            tok = jnp.asarray(prompt[j:j + 1])
-            logits, st = self._decode_b1_fn(self.params, tok, st)
-        self.pool = self._write_fn(self.pool, st, jnp.int32(slot))
-
-        first = self._sample_one(req, logits)
-        now = self._now()
-        result = RequestResult(uid=req.uid, prompt=list(map(int, prompt)),
-                               tokens=[first],
-                               arrival_time=req.arrival_time,
-                               admit_time=now, token_times=[now])
-        # exact-cache pages hold max_len keys: prompt + decoded tokens
-        budget = min(req.max_new_tokens, self.max_len - length)
-        self._slots[slot] = _Slot(req, result, budget)
-        self._active[slot] = True
-        self._temps[slot] = req.temperature
-        self._toks[slot] = first
-        self._stats["prefill_tokens"] += length
-        self._stats["emitted_tokens"] += 1
-        self._stats["admitted"] += 1
+        if req.top_k <= 0 and req.top_p >= 1.0:
+            return int(self._sample_plain_fn(key, logits_row, temps)[0])
+        return int(self._sample_fn(
+            key, logits_row, temps,
+            jnp.full((1,), req.top_k, jnp.int32),
+            jnp.full((1,), req.top_p, jnp.float32))[0])
 
     def _admissions(self, now: float) -> None:
+        """Reserve a free slot (prefill cursor 0, fresh staging state)
+        for every arrived request, FIFO."""
         while self._queue and self._queue[0].arrival_time <= now:
             free = [i for i in range(self.max_slots)
                     if self._slots[i] is None]
             if not free:
                 return
-            self._admit(self._queue.pop(0), free[0])
+            req = self._queue.pop(0)
+            result = RequestResult(uid=req.uid,
+                                   prompt=list(map(int, req.prompt)),
+                                   arrival_time=req.arrival_time)
+            # exact-cache pages hold max_len keys: prompt + decoded tokens
+            budget = min(req.max_new_tokens,
+                         self.max_len - len(req.prompt))
+            self._slots[free[0]] = _Slot(req, result, budget, self._fresh)
+            self._prefill_order.append(free[0])
+
+    def _advance_prefill(self, i: int) -> Optional[Array]:
+        """Run slot i's next prompt chunk. Returns the chunk's logits
+        when the prompt is finished, else None."""
+        slot = self._slots[i]
+        prompt = slot.req.prompt
+        remaining = len(prompt) - slot.cursor
+        t = (remaining if self.chunk_tokens is None
+             else min(self.chunk_tokens, remaining))
+        tok = jnp.asarray(
+            np.asarray(prompt[slot.cursor:slot.cursor + t], np.int32)[None])
+        logits, slot.state = self._prefill_chunk_fn(self.params, tok,
+                                                    slot.state)
+        slot.cursor += t
+        self._stats["prefill_tokens"] += t
+        self._stats["prefill_chunks"] += 1
+        return logits if slot.cursor == len(prompt) else None
+
+    def _finish_admission(self, i: int, logits: Array) -> None:
+        """Scatter the staged state into pool row i and activate it."""
+        slot = self._slots[i]
+        self.pool = self._write_fn(self.pool, slot.state, jnp.int32(i))
+        slot.state = None
+        first = self._sample_one(slot.req, logits)
+        now = self._now()
+        slot.result.admit_time = now
+        slot.result.tokens = [first]
+        slot.result.token_times = [now]
+        self._active[i] = True
+        self._temps[i] = slot.req.temperature
+        self._top_ks[i] = slot.req.top_k
+        self._top_ps[i] = slot.req.top_p
+        self._toks[i] = first
+        self._stats["emitted_tokens"] += 1
+        self._stats["admitted"] += 1
+
+    def _prefill_work(self) -> None:
+        """Spend this step's prefill budget.
+
+        Chunked (``chunk_tokens=N``): at most one chunk (<= N prompt
+        tokens) of the oldest mid-prefill admission — the invariant the
+        latency benchmark measures is that no more than N prompt tokens
+        ever run between consecutive batched decode steps. Blocking
+        (``chunk_tokens=None``): every pending admission prefills its
+        whole prompt now.
+        """
+        spent = 0
+        while self._prefill_order:
+            i = self._prefill_order[0]
+            before = self._slots[i].cursor
+            logits = self._advance_prefill(i)
+            spent += self._slots[i].cursor - before
+            if logits is not None:
+                self._prefill_order.pop(0)
+                self._finish_admission(i, logits)
+            if self.chunk_tokens is not None:
+                break                      # one chunk per step, at most
+        self._stats["max_prefill_tokens_per_step"] = max(
+            self._stats["max_prefill_tokens_per_step"], spent)
 
     # -- decode -----------------------------------------------------------
 
     def step(self) -> list[RequestResult]:
-        """Admit what has arrived, run one batched decode step over the
-        active slots, evict finished sequences. Returns newly finished
-        results (possibly empty)."""
+        """Admit what has arrived, run one prompt chunk (if an admission
+        is mid-prefill), one batched decode step over the active slots,
+        and evict finished sequences. Returns newly finished results
+        (possibly empty)."""
         finished: list[RequestResult] = []
         self._admissions(self._now())
+        self._prefill_work()
         # admission may already exhaust a request (budget/eos on token 1)
         for i, slot in enumerate(self._slots):
-            if slot is not None and self._done(slot):
+            if slot is not None and self._active[i] and self._done(slot):
                 finished.append(self._finish(i))
         if not self._active.any():
             return finished
@@ -256,8 +366,17 @@ class ServingEngine:
             self.params, self.pool, jnp.asarray(self._toks),
             jnp.asarray(self._active))
         key = jax.random.fold_in(self._key, self._step_count)
-        toks = np.asarray(self._sample_fn(key, logits,
-                                          jnp.asarray(self._temps)))
+        # host-side check: only pay the full-vocab sort/cumsum masks when
+        # some active row actually uses top-k/p (the masks are identity
+        # at the defaults, so both paths sample identically)
+        if (self._top_ks > 0).any() or (self._top_ps < 1.0).any():
+            toks = np.asarray(self._sample_fn(key, logits,
+                                              jnp.asarray(self._temps),
+                                              jnp.asarray(self._top_ks),
+                                              jnp.asarray(self._top_ps)))
+        else:
+            toks = np.asarray(self._sample_plain_fn(
+                key, logits, jnp.asarray(self._temps)))
         now = self._now()
         n_act = int(self._active.sum())
         self._stats["decode_steps"] += 1
@@ -297,7 +416,8 @@ class ServingEngine:
         """
         results: list[RequestResult] = []
         while self.has_work:
-            if self.num_active == 0 and self._queue:
+            if (self.num_active == 0 and not self._prefill_order
+                    and self._queue):
                 wait = self._queue[0].arrival_time - self._now()
                 if wait > 0:
                     if realtime:

@@ -28,11 +28,17 @@ class Request:
     the scheduler will not admit a request before it "arrives" (used by
     the Poisson-traffic benchmark; 0.0 = immediately available).
     ``temperature`` 0.0 means greedy decoding (deterministic — this is
-    what the parity tests use).
+    what the parity tests use). ``top_k`` (0 = off) and ``top_p``
+    (1.0 = off) restrict temperature sampling to the k highest-logit /
+    smallest p-mass nucleus tokens per step; they are applied per slot
+    row inside the engine's jitted sample step and leave greedy decoding
+    untouched.
     """
     prompt: Sequence[int]
     max_new_tokens: int = 16
     temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
     eos_id: Optional[int] = None
     arrival_time: float = 0.0
     uid: int = dataclasses.field(default_factory=next_uid)
@@ -67,7 +73,8 @@ def synthetic_requests(n: int, vocab: int, *, seed: int = 0,
                        rate: float = 0.0,
                        prompt_range: tuple[int, int] = (16, 64),
                        gen_range: tuple[int, int] = (16, 32),
-                       temperature: float = 0.0) -> list[Request]:
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0) -> list[Request]:
     """Random-token request stream shared by the serve CLI and the
     serving benchmarks. ``rate`` > 0 spaces arrivals by an exponential
     (Poisson process) clock; 0 makes everything available at t=0."""
@@ -80,5 +87,6 @@ def synthetic_requests(n: int, vocab: int, *, seed: int = 0,
             prompt=[rng.randrange(vocab)
                     for _ in range(rng.randint(*prompt_range))],
             max_new_tokens=rng.randint(*gen_range),
-            temperature=temperature, arrival_time=t))
+            temperature=temperature, top_k=top_k, top_p=top_p,
+            arrival_time=t))
     return reqs

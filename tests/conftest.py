@@ -7,6 +7,13 @@ import pytest
 jax.config.update("jax_enable_x64", False)
 
 
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: benchmarks-adjacent / subprocess-heavy tests skipped by "
+        "scripts/check.sh --fast")
+
+
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)

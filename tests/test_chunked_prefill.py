@@ -1,0 +1,313 @@
+"""Chunked-prefill scheduler + resumable prefill (ISSUE 2 tentpole).
+
+Three layers of guarantee:
+  * lm-level: chained ``prefill_chunk`` calls reproduce whole-prompt
+    ``lm.prefill`` to f32 rounding for exact/performer/darkformer (the
+    running k-stabilizer max changes the trajectory), and BIT-exactly
+    when the whole prompt is one chunk;
+  * engine-level: with ``chunk_tokens=N`` no more than N prompt tokens
+    execute between consecutive batched decode steps, decode keeps
+    making progress while a long prompt admits, and greedy streams match
+    blocking admission;
+  * edge paths: cancel of a mid-prefill (cursor > 0) request, admission
+    against a full pool, per-request top_k / top_p sampling.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgs
+from repro.models import lm
+from repro.serving import Request, ServingEngine
+
+
+def _cfg(kind: str, **kw):
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _params(cfg):
+    return lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prompt(vocab, l, seed=1):
+    return jax.random.randint(jax.random.PRNGKey(seed), (l,), 0,
+                              vocab).tolist()
+
+
+def _reference_greedy(params, cfg, prompt, n, max_len):
+    lg, st = lm.prefill(params, cfg, {"tokens": jnp.asarray([prompt])},
+                        max_len=max_len)
+    toks = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(n - 1):
+        lg, st = lm.decode_step(params, cfg, jnp.asarray(toks[-1:]), st)
+        toks.append(int(jnp.argmax(lg[0])))
+    return toks
+
+
+def _chained_prefill(params, cfg, toks, schedule, max_len):
+    st = lm.init_serve_state(cfg, b=1, max_len=max_len)
+    lo = 0
+    for t in schedule:
+        lg, st = lm.prefill_chunk(params, cfg,
+                                  {"tokens": toks[:, lo:lo + t]}, st)
+        lo += t
+    assert lo == toks.shape[1]
+    return lg, st
+
+
+# ---------------------------------------------------------------------------
+# lm-level parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["darkformer", "performer", "exact"])
+def test_chunked_prefill_matches_whole_prompt(kind):
+    """Uneven chunk schedule == whole-prompt prefill to f32 rounding on
+    both the last-position logits and every serve-state leaf."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    toks = jnp.asarray([_prompt(cfg.vocab, 13)])
+    lg_full, st_full = lm.prefill(params, cfg, {"tokens": toks},
+                                  max_len=32)
+    lg, st = _chained_prefill(params, cfg, toks, (5, 4, 3, 1), max_len=32)
+    np.testing.assert_allclose(np.asarray(lg), np.asarray(lg_full[:, -1]),
+                               atol=1e-4)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(st)[0],
+            jax.tree_util.tree_flatten_with_path(st_full)[0]):
+        np.testing.assert_allclose(
+            np.asarray(a, np.float32), np.asarray(b, np.float32),
+            atol=1e-4, err_msg=(kind, jax.tree_util.keystr(pa)))
+
+
+@pytest.mark.parametrize("kind", ["darkformer", "performer", "exact"])
+def test_single_chunk_prefill_is_bit_exact(kind):
+    """One whole-prompt chunk from a fresh state IS lm.prefill, bitwise:
+    same stabilizer trajectory, same code path."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    toks = jnp.asarray([_prompt(cfg.vocab, 11, seed=3)])
+    lg_full, st_full = lm.prefill(params, cfg, {"tokens": toks},
+                                  max_len=32)
+    lg, st = _chained_prefill(params, cfg, toks, (11,), max_len=32)
+    np.testing.assert_array_equal(np.asarray(lg),
+                                  np.asarray(lg_full[:, -1]))
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(st)[0],
+            jax.tree_util.tree_flatten_with_path(st_full)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=jax.tree_util.keystr(pa))
+
+
+def test_chunked_prefill_pallas_path_matches_jnp():
+    """cfg.use_kernel routes resumed chunks through the Pallas carry
+    kernel; logits and state must track the pure-jnp path."""
+    toks = None
+    results = {}
+    for use_kernel in (False, True):
+        cfg = _cfg("darkformer", use_kernel=use_kernel)
+        params = _params(cfg)
+        if toks is None:
+            toks = jnp.asarray([_prompt(cfg.vocab, 12, seed=5)])
+        results[use_kernel] = _chained_prefill(params, cfg, toks,
+                                               (5, 7), max_len=32)
+    np.testing.assert_allclose(np.asarray(results[True][0]),
+                               np.asarray(results[False][0]), atol=1e-4)
+    for a, b in zip(jax.tree_util.tree_leaves(results[True][1]),
+                    jax.tree_util.tree_leaves(results[False][1])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-4)
+
+
+def test_chunked_prefill_then_decode_matches_uninterrupted(
+        kind="darkformer"):
+    """Decode from a chunk-assembled state continues the sequence: the
+    greedy stream equals the whole-prompt-prefill stream."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    prompt = _prompt(cfg.vocab, 14, seed=7)
+    ref = _reference_greedy(params, cfg, prompt, 8, max_len=48)
+    lgc, st = _chained_prefill(params, cfg, jnp.asarray([prompt]),
+                               (6, 6, 2), max_len=48)
+    toks = [int(jnp.argmax(lgc[0]))]
+    for _ in range(7):
+        lg, st = lm.decode_step(params, cfg, jnp.asarray(toks[-1:]), st)
+        toks.append(int(jnp.argmax(lg[0])))
+    assert toks == ref
+
+
+# ---------------------------------------------------------------------------
+# engine-level scheduler invariants
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["darkformer", "exact"])
+def test_engine_chunked_streams_match_blocking(kind):
+    """Greedy token streams are invariant to the admission schedule."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    prompts = [_prompt(cfg.vocab, l, seed=10 + l) for l in (17, 9, 23)]
+    streams = {}
+    for chunk in (None, 5, 64):
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=64,
+                            chunk_tokens=chunk)
+        uids = [eng.submit(Request(prompt=p, max_new_tokens=6))
+                for p in prompts]
+        got = {r.uid: r.tokens for r in eng.run()}
+        streams[chunk] = [got[u] for u in uids]
+    assert streams[None] == streams[5], kind
+    # chunk_tokens >= prompt_len: whole prompt in one chunk -> the very
+    # same computation as blocking admission
+    assert streams[None] == streams[64], kind
+
+
+def test_engine_prefill_budget_and_decode_progress():
+    """A long-prompt admission never runs more than chunk_tokens prompt
+    tokens between consecutive decode steps, and the already-active
+    sequence keeps emitting one token per step throughout."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    short = _prompt(cfg.vocab, 4, seed=20)
+    long = _prompt(cfg.vocab, 33, seed=21)
+    ref_short = _reference_greedy(params, cfg, short, 20, max_len=64)
+
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=64,
+                        chunk_tokens=4)
+    uid_s = eng.submit(Request(prompt=short, max_new_tokens=20))
+    eng.step()                                  # short admits + decodes
+    assert eng.num_active == 1
+    uid_l = eng.submit(Request(prompt=long, max_new_tokens=4))
+    # 33 tokens / chunk 4 -> 9 chunks; the long request must stay
+    # mid-prefill for 8 steps while the short one decodes each step
+    for n in range(8):
+        eng.step()
+        assert eng.num_active == 1, n
+        assert eng.num_prefilling == 1, n
+    eng.step()                                  # 9th chunk -> admitted
+    assert eng.num_active == 2
+    results = {r.uid: r for r in eng.run()}
+    assert results[uid_s].tokens == ref_short
+    st = eng.stats
+    assert st["max_prefill_tokens_per_step"] <= 4
+    assert st["prefill_chunks"] >= 10           # 1 (short) + 9 (long)
+    assert st["prefill_tokens"] == len(short) + len(long)
+
+
+def test_cancel_mid_prefill_frees_slot_and_leaves_others_untouched():
+    """cancel() of a request with prefill cursor > 0 drops its staged
+    state, frees the slot for the next admission, and does not perturb
+    the active sequence."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    pa = _prompt(cfg.vocab, 5, seed=30)
+    pb = _prompt(cfg.vocab, 29, seed=31)
+    pc = _prompt(cfg.vocab, 7, seed=32)
+    ref_a = _reference_greedy(params, cfg, pa, 16, max_len=48)
+    ref_c = _reference_greedy(params, cfg, pc, 5, max_len=48)
+
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=48,
+                        chunk_tokens=4)
+    uid_a = eng.submit(Request(prompt=pa, max_new_tokens=16))
+    eng.step()
+    uid_b = eng.submit(Request(prompt=pb, max_new_tokens=8))
+    eng.step()
+    eng.step()                                  # b's cursor now 4..8
+    slot_b = next(s for s in eng._slots
+                  if s is not None and s.req.uid == uid_b)
+    assert 0 < slot_b.cursor < len(pb)
+    res_b = eng.cancel(uid_b)
+    assert res_b.cancelled and res_b.tokens == []
+    assert eng.num_prefilling == 0
+    uid_c = eng.submit(Request(prompt=pc, max_new_tokens=5))
+    got = {r.uid: r for r in eng.run()}
+    assert got[uid_a].tokens == ref_a          # undisturbed by b's life
+    assert got[uid_c].tokens == ref_c          # reused b's slot cleanly
+    assert eng.stats["admitted"] == 2          # b never finished admission
+
+
+def test_admission_waits_for_full_pool():
+    """With one slot, the second request only admits after the first
+    evicts — and still decodes exactly."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    p1 = _prompt(cfg.vocab, 9, seed=40)
+    p2 = _prompt(cfg.vocab, 12, seed=41)
+    refs = [_reference_greedy(params, cfg, p, 5, max_len=32)
+            for p in (p1, p2)]
+    eng = ServingEngine(params, cfg, max_slots=1, max_len=32,
+                        chunk_tokens=4)
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=5))
+            for p in (p1, p2)]
+    eng.step()
+    assert eng.num_active + eng.num_prefilling == 1   # pool full
+    assert len(eng._queue) == 1                        # second one queued
+    got = {r.uid: r.tokens for r in eng.run()}
+    for uid, ref in zip(uids, refs):
+        assert got[uid] == ref
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling params
+# ---------------------------------------------------------------------------
+
+def test_top_k_one_and_tiny_top_p_reduce_to_greedy():
+    """top_k=1 (or a nucleus so small only the argmax survives) must
+    reproduce the greedy stream even at temperature 1."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prompt = _prompt(cfg.vocab, 8, seed=50)
+    ref = _reference_greedy(params, cfg, prompt, 6, max_len=32)
+    for kw in ({"top_k": 1}, {"top_p": 1e-6}):
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=32)
+        uid = eng.submit(Request(prompt=prompt, max_new_tokens=6,
+                                 temperature=1.0, **kw))
+        got = {r.uid: r.tokens for r in eng.run()}
+        assert got[uid] == ref, kw
+
+
+def test_sampling_defaults_change_nothing():
+    """temperature>0 with default top_k/top_p must draw the same stream
+    as the pre-top-k/p engine did (same keys, same scaled logits)."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prompt = _prompt(cfg.vocab, 8, seed=51)
+    streams = []
+    for _ in range(2):                        # deterministic across runs
+        eng = ServingEngine(params, cfg, max_slots=2, max_len=32, seed=7)
+        # pin the uid: it is folded into the per-step sample key
+        uid = eng.submit(Request(prompt=prompt, max_new_tokens=6,
+                                 temperature=0.8, uid=991))
+        streams.append({r.uid: r.tokens for r in eng.run()}[uid])
+    assert streams[0] == streams[1]
+    assert len(streams[0]) == 6
+
+
+def test_mixed_sampling_rows_in_one_batch():
+    """Greedy and top-k rows co-batched: the greedy row must stay
+    bit-identical to its solo reference."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    pg = _prompt(cfg.vocab, 6, seed=60)
+    ps = _prompt(cfg.vocab, 7, seed=61)
+    ref = _reference_greedy(params, cfg, pg, 8, max_len=32)
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=32)
+    uid_g = eng.submit(Request(prompt=pg, max_new_tokens=8))
+    eng.submit(Request(prompt=ps, max_new_tokens=8, temperature=1.0,
+                       top_k=5, top_p=0.9))
+    got = {r.uid: r.tokens for r in eng.run()}
+    assert got[uid_g] == ref
+
+
+def test_submit_rejects_degenerate_sampling_params():
+    """top_p <= 0 would mask every token; reject at submit()."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, max_slots=1, max_len=32)
+    p = _prompt(cfg.vocab, 4, seed=70)
+    for kw in ({"top_p": 0.0}, {"top_p": -0.5}, {"top_k": -1},
+               {"temperature": -1.0}):
+        with pytest.raises(ValueError):
+            eng.submit(Request(prompt=p, **kw))

@@ -6,6 +6,11 @@ import sys
 
 import pytest
 
+# multi-device subprocesses / full launcher runs: minutes of
+# wall-clock; skipped by scripts/check.sh --fast
+pytestmark = pytest.mark.slow
+
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 

@@ -264,3 +264,81 @@ def test_prf_decode_step_ops_wrapper_shapes():
         jnp.broadcast_to(rescale, (b, g, hg)).reshape(-1, 1))
     np.testing.assert_allclose(np.asarray(out).reshape(-1, dv),
                                np.asarray(eo), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Carried-state (chunked prefill) scan kernel
+# ---------------------------------------------------------------------------
+
+from repro.kernels.linear_attn_scan import (  # noqa: E402
+    linear_attention_causal_carry_fwd)
+from repro.core import linear_attention as la  # noqa: E402
+
+
+def _carry_inputs(n, l, m, dv, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kq, kk, kv, ks, kz = jax.random.split(key, 5)
+    qf = jax.random.uniform(kq, (n, l, m))
+    kf = jax.random.uniform(kk, (n, l, m))
+    v = jax.random.normal(kv, (n, l, dv))
+    s0 = jax.random.normal(ks, (n, m, dv))
+    z0 = jax.random.uniform(kz, (n, m)) * 4.0
+    return qf, kf, v, s0, z0
+
+
+@pytest.mark.parametrize("n,l,m,dv,chunk", [
+    (2, 32, 16, 8, 16),
+    (3, 37, 16, 8, 16),           # non-divisible L -> padding path
+    (1, 8, 4, 4, 8),              # chunk == L
+])
+def test_carry_kernel_matches_oracle(n, l, m, dv, chunk):
+    qf, kf, v, s0, z0 = _carry_inputs(n, l, m, dv, seed=l)
+    out, s, z = linear_attention_causal_carry_fwd(
+        qf, kf, v, s0, z0, chunk=chunk, interpret=True)
+    eo, es, ez = ref.linear_attention_carry_ref(qf, kf, v, s0, z0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eo), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(es), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(ez), atol=2e-5)
+
+
+def test_carry_kernel_zero_state_matches_fresh_kernel():
+    """Seeding with zeros is exactly the fresh-sequence kernel."""
+    qf, kf, v, _, _ = _carry_inputs(2, 48, 16, 8, seed=3)
+    s0 = jnp.zeros((2, 16, 8))
+    z0 = jnp.zeros((2, 16))
+    out, _, _ = linear_attention_causal_carry_fwd(
+        qf, kf, v, s0, z0, chunk=16, interpret=True)
+    fresh = linear_attention_causal_fwd(qf, kf, v, chunk=16, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(fresh))
+
+
+def test_carry_kernel_chained_chunks_match_single_pass():
+    """Splitting a prompt into resumed chunks reproduces one full pass —
+    the property the chunked-prefill scheduler rests on."""
+    qf, kf, v, _, _ = _carry_inputs(2, 40, 16, 8, seed=5)
+    s = jnp.zeros((2, 16, 8))
+    z = jnp.zeros((2, 16))
+    outs = []
+    for lo, hi in ((0, 16), (16, 27), (27, 40)):   # uneven chunk schedule
+        o, s, z = linear_attention_causal_carry_fwd(
+            qf[:, lo:hi], kf[:, lo:hi], v[:, lo:hi], s, z,
+            chunk=16, interpret=True)
+        outs.append(o)
+    full, sf, zf = ref.linear_attention_carry_ref(
+        qf, kf, v, jnp.zeros((2, 16, 8)), jnp.zeros((2, 16)))
+    np.testing.assert_allclose(np.asarray(jnp.concatenate(outs, axis=1)),
+                               np.asarray(full), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sf), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(zf), atol=2e-5)
+
+
+def test_jnp_carry_oracle_matches_masked_ref():
+    """The pure-jnp chunked carry (core.linear_attention) agrees with the
+    O(L^2) masked oracle on out and final state."""
+    qf, kf, v, s0, z0 = _carry_inputs(2, 29, 16, 8, seed=7)
+    out, s, z = la.linear_attention_causal_carry(qf, kf, v, s0, z0,
+                                                 chunk=8)
+    eo, es, ez = ref.linear_attention_carry_ref(qf, kf, v, s0, z0)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(eo), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(es), atol=2e-5)
+    np.testing.assert_allclose(np.asarray(z), np.asarray(ez), atol=2e-5)

@@ -141,21 +141,21 @@ def test_slot_write_read_roundtrip():
             assert int(np.max(np.asarray(leaf))) == 0
 
 
-def test_bucketed_prefill_admission_matches_exact_prefill():
-    """prefill_bucket splits admission into head-prefill + decode-tail;
-    the k-stabilizer trajectory changes, so logits only agree to f32
+def test_chunked_prefill_admission_matches_blocking_admission():
+    """chunk_tokens splits admission into resumed prompt chunks; the
+    k-stabilizer trajectory changes, so logits only agree to f32
     rounding — greedy streams must still match on this model."""
     cfg = _cfg("darkformer")
     params = _params(cfg)
     prompts = _prompts(cfg.vocab, (13, 9))
     streams = {}
-    for bucket in (None, 4):
+    for chunk in (None, 4):
         eng = ServingEngine(params, cfg, max_slots=2, max_len=48,
-                            prefill_bucket=bucket)
+                            chunk_tokens=chunk)
         uids = [eng.submit(Request(prompt=p, max_new_tokens=6))
                 for p in prompts]
         got = {r.uid: r.tokens for r in eng.run()}
-        streams[bucket] = [got[u] for u in uids]
+        streams[chunk] = [got[u] for u in uids]
     assert streams[None] == streams[4]
 
 
