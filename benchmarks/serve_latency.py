@@ -17,9 +17,18 @@ sharing the pool with a long-prompt admission — under blocking
 (``chunk_tokens=None``) vs chunked admission. The long prefill stalls
 every active decode slot in blocking mode; chunking bounds the stall by
 the chunk execution time. Reports the short requests' TPOT p50/p99/max
-("stall") and the long request's TTFT for both schedules; the snapshot
-lands in experiments/bench/BENCH_serve_chunked.json (tracked snapshot:
-BENCH_serve_chunked.json at the repo root).
+("stall") and the long request's TTFT for both schedules (tracked
+snapshot: experiments/bench/BENCH_serve_chunked.json).
+
+Part 4 (batched prefill): an admission burst — several prompts arriving
+together — under the serial one-admission-per-step schedule
+(``prefill_rows=1``) vs the packed multi-admission schedule (all staged
+rows advance in ONE padded prefill-chunk call per step), at matched
+per-row chunk size. Per-call cost is sublinear in rows, so packing
+compresses the admission pipeline ~n_burst x for a much smaller
+increase in per-step stall. Reports burst wall time, last-admission
+TTFT and the prefill call/batch stats for both (tracked snapshot:
+experiments/bench/BENCH_serve_batched.json).
 """
 from __future__ import annotations
 
@@ -175,11 +184,85 @@ def run_chunked_prefill(fast: bool = True, chunk_tokens: int = 128,
     return out
 
 
+def run_batched_prefill(fast: bool = True, row_chunk: int = 32,
+                        n_burst: int = 4, prompt_len: int = 96) -> dict:
+    """Serial vs batched multi-admission prefill under an admission
+    burst (n_burst equal prompts at once), at MATCHED per-row chunk
+    size: the serial schedule (prefill_rows=1, chunk_tokens=row_chunk)
+    advances one admission by row_chunk tokens per step, so the burst
+    admits in n_burst x (prompt/row_chunk) steps; the packed schedule
+    (chunk_tokens=n_burst*row_chunk) advances EVERY staged row by
+    row_chunk in one padded (P, L) call, admitting the whole burst in
+    prompt/row_chunk steps. Per-call cost is sublinear in rows, so the
+    packed schedule trades a < n_burst x per-step stall for an
+    n_burst x shorter admission pipeline. Reports wall time to drain
+    the burst, last-admission TTFT (the metric the packed schedule
+    compresses), per-step prefill stall, and the packer's
+    call/occupancy stats."""
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    gen = 8 if fast else 16
+    reps = 3 if fast else 6
+    out = {"row_chunk": row_chunk, "n_burst": n_burst,
+           "prompt_len": prompt_len}
+    import random
+    import time as _t
+    schedules = (("serial", 1, row_chunk),
+                 ("batched", None, n_burst * row_chunk))
+    for label, rows, chunk in schedules:
+        eng = ServingEngine(params, cfg, max_slots=n_burst, max_len=256,
+                            chunk_tokens=chunk, prefill_rows=rows)
+        rng = random.Random(0)
+
+        def burst_pass(eng, rng):
+            now = eng._now()                 # engine-clock arrivals so
+            uids = [eng.submit(Request(      # TTFT is per-pass, not
+                prompt=_rand_prompt(rng, cfg.vocab, prompt_len),
+                max_new_tokens=gen, arrival_time=now))
+                for _ in range(n_burst)]     # cumulative
+            start = _t.perf_counter()
+            res = {r.uid: r for r in eng.run()}
+            wall = _t.perf_counter() - start
+            return [res[u] for u in uids], wall
+
+        burst_pass(eng, rng)                 # compile warmup
+        ttfts, walls = [], []
+        for _ in range(reps):
+            results, wall = burst_pass(eng, rng)
+            ttfts.append(max(r.ttft for r in results))   # last admission
+            walls.append(wall)
+        st = eng.stats
+        row = {
+            "chunk_tokens": chunk,
+            "burst_wall_ms": float(np.median(walls) * 1e3),
+            "last_ttft_ms": float(np.median(ttfts) * 1e3),
+            "prefill_stall_per_step": st["max_prefill_tokens_per_step"],
+            "prefill_calls": st["prefill_calls"],
+            "prefill_rows_per_call": st["prefill_rows_per_call"],
+            "prefill_batch_occupancy": st["prefill_batch_occupancy"],
+        }
+        out[label] = row
+        print(f"  prefill[{label}]: burst wall={row['burst_wall_ms']:.0f}ms "
+              f"last ttft={row['last_ttft_ms']:.0f}ms, "
+              f"{row['prefill_calls']} calls "
+              f"({row['prefill_rows_per_call']:.1f} rows/call, "
+              f"occupancy {row['prefill_batch_occupancy'] * 100:.0f}%, "
+              f"stall<={row['prefill_stall_per_step']} tok/step)",
+              flush=True)
+    out["last_ttft_improvement"] = (out["serial"]["last_ttft_ms"]
+                                    / max(out["batched"]["last_ttft_ms"],
+                                          1e-9))
+    save_result("BENCH_serve_batched", out)
+    return out
+
+
 def run(fast: bool = True) -> dict:
     scaling = run_context_scaling(fast)
     traffic = run_engine_traffic(fast)
     chunked = run_chunked_prefill(fast)
-    out = {**scaling, "traffic": traffic, "chunked_prefill": chunked}
+    batched = run_batched_prefill(fast)
+    out = {**scaling, "traffic": traffic, "chunked_prefill": chunked,
+           "batched_prefill": batched}
     save_result("serve_latency", out)
     return out
 

@@ -85,24 +85,38 @@ def _qk_feature_pair(q, k, fparams, cfg: fm.FeatureConfig):
     return qf, kf, kc
 
 
-def _resume_qk_features(qs, ks, fparams, cfg: fm.FeatureConfig, c_in):
+def _resume_qk_features(qs, ks, fparams, cfg: fm.FeatureConfig, c_in,
+                        valid_mask: Optional[Array] = None):
     """Feature pair against the RUNNING k-stabilizer carried in ``c_in``
     (see module docstring): the new max folds the incoming one, and the
     carried (S, z) must be scaled by ``rescale = exp(c_in - c_new)``.
     The shared core of one-token decode and resumed chunk prefill.
+
+    ``valid_mask`` ((B, 1, 1, L, 1) bool, or None for all-valid) marks
+    ragged-row padding: masked positions contribute nothing to the
+    stabilizer maxes and get zero k-features, so a padded row's state
+    advances exactly as its unpadded (B=1) counterpart would.
     Returns (qf, kf, c_new, rescale)."""
     inv_sqrt_m = cfg.num_features ** -0.5
     qraw = _raw_logits(qs, fparams, cfg.kind)
     kraw = _raw_logits(ks, fparams, cfg.kind)
-    qf = jnp.exp(qraw - _stab_max(qraw, cfg.stabilize)) * inv_sqrt_m
+    if valid_mask is not None:
+        neg = jnp.finfo(jnp.float32).min
+        qraw_m = jnp.where(valid_mask, qraw, neg)
+        kraw_m = jnp.where(valid_mask, kraw, neg)
+    else:
+        qraw_m, kraw_m = qraw, kraw
+    qf = jnp.exp(qraw - _stab_max(qraw_m, cfg.stabilize)) * inv_sqrt_m
     if cfg.stabilize:
-        c_new = jnp.maximum(c_in, _stab_max(kraw, True))
+        c_new = jnp.maximum(c_in, _stab_max(kraw_m, True))
     else:
         # unstabilized features carry c == 0 (the init state's -inf
         # sentinel only ever zeroes an all-zero fresh state)
         c_new = jnp.zeros_like(c_in)
     rescale = jnp.exp(c_in - c_new)                    # <= 1
     kf = jnp.exp(kraw - c_new) * inv_sqrt_m
+    if valid_mask is not None:
+        kf = jnp.where(valid_mask, kf, 0.0)
     return qf, kf, c_new, rescale
 
 
@@ -158,13 +172,42 @@ class AttnServeState(NamedTuple):
 
 
 def _exact_prefill_resume(qs, ks, v, state: AttnServeState,
-                          window: Optional[int], out_dtype):
+                          window: Optional[int], out_dtype,
+                          valid_len: Optional[Array] = None):
     """Append an l-token chunk to the exact KV cache and attend the chunk
     queries over the whole valid prefix. ``state.length`` is () or (B,)
-    — the multi-token generalization of ``_exact_decode``."""
+    — the multi-token generalization of ``_exact_decode``.
+
+    ``valid_len`` ((B,) int32, requires a (B,) ``length``) marks ragged
+    rows: row b appends only its first ``valid_len[b]`` keys/values and
+    advances its write index by ``valid_len[b]`` — the padded positions
+    of a batched multi-admission prefill chunk leave no trace. The
+    ragged write is a masked gather-scatter, NOT a dynamic slice: a
+    padded chunk near the end of a page can have ``idx + l > lmax``,
+    and dynamic_update_slice would clamp the start and shift every
+    valid write."""
     l = qs.shape[-2]
     idx = state.length
-    if idx.ndim == 0:
+    if valid_len is not None:
+        # per-cache-position source index into the chunk; positions in
+        # [idx, idx + valid_len) take chunk token (pos - idx), the rest
+        # keep the old page contents
+        lmax = state.kv_k.shape[2]
+        kpos = jnp.arange(lmax)
+        rel = kpos[None] - idx[:, None]                  # (B, lmax)
+        keep = (rel >= 0) & (rel < valid_len[:, None])
+        relc = jnp.clip(rel, 0, l - 1)[:, None, :, None]
+        knew = jnp.take_along_axis(
+            ks[:, :, 0], jnp.broadcast_to(relc, ks[:, :, 0].shape[:2]
+                                          + (lmax, ks.shape[-1])), axis=2)
+        vnew = jnp.take_along_axis(
+            v[:, :, 0], jnp.broadcast_to(relc, v[:, :, 0].shape[:2]
+                                         + (lmax, v.shape[-1])), axis=2)
+        km = keep[:, None, :, None]
+        kc = jnp.where(km, knew, state.kv_k)
+        vc = jnp.where(km, vnew, state.kv_v)
+        qpos_b = idx[:, None] + jnp.arange(l)[None]      # (B, l)
+    elif idx.ndim == 0:
         kc = jax.lax.dynamic_update_slice_in_dim(
             state.kv_k, ks[:, :, 0], idx, axis=2)
         vc = jax.lax.dynamic_update_slice_in_dim(
@@ -188,14 +231,16 @@ def _exact_prefill_resume(qs, ks, v, state: AttnServeState,
     logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(out_dtype)
-    return out, state._replace(kv_k=kc, kv_v=vc, length=idx + l)
+    adv = l if valid_len is None else valid_len
+    return out, state._replace(kv_k=kc, kv_v=vc, length=idx + adv)
 
 
 def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
                          window: Optional[int] = None, chunk: int = 256,
                          max_len: Optional[int] = None,
                          use_kernel: bool = False,
-                         state: Optional[AttnServeState] = None):
+                         state: Optional[AttnServeState] = None,
+                         valid_len: Optional[Array] = None):
     """Causal pass over a prompt (chunk) + advanced serving state.
 
     ``state=None`` is the legacy whole-prompt entry point: the serving
@@ -207,13 +252,23 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
     prompt split into chunks reproduces the whole-prompt pass to f32
     rounding (bit-exact only when the whole prompt is one chunk from a
     fresh state, which fixes the stabilizer trajectory).
+
+    ``valid_len`` ((B,) int32, resume-only) makes the chunk ragged: row b
+    advances over its first ``valid_len[b]`` positions only; padded
+    positions contribute nothing to the state (masked k-features / masked
+    cache writes). Outputs at padded positions are garbage by contract —
+    callers gather per-row at ``valid_len - 1``.
     """
     b, g, hg, l, _ = q.shape
     dv = v.shape[-1]
+    if valid_len is not None and state is None:
+        raise ValueError("valid_len requires an incoming serve state "
+                         "(ragged rows only arise in resumed chunks)")
     if cfg.kind == "exact":
         qs, ks = _scale_qk(q, k)
         if state is not None:
-            return _exact_prefill_resume(qs, ks, v, state, window, v.dtype)
+            return _exact_prefill_resume(qs, ks, v, state, window, v.dtype,
+                                         valid_len=valid_len)
         out = la.exact_attention(qs, ks, v, causal=True, window=window)
         lmax = max_len or l
         kc = jnp.pad(ks[:, :, 0], ((0, 0), (0, 0), (0, lmax - l), (0, 0)))
@@ -241,8 +296,11 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
 
     # resume: online rescale of the k stabilizer, then the carried-state
     # chunked scan.
+    vmask = (None if valid_len is None else
+             (jnp.arange(l)[None] < valid_len[:, None])
+             .reshape(b, 1, 1, l, 1))
     qf, kf, c_new, rescale = _resume_qk_features(qs, ks, fparams, cfg,
-                                                 state.c)
+                                                 state.c, valid_mask=vmask)
     kfb = jnp.broadcast_to(kf, (b, g, hg, l, cfg.num_features))
     vv = jnp.broadcast_to(v, (b, g, hg, l, dv))
     s0 = state.s * rescale

@@ -63,6 +63,13 @@ def main():
                     help="chunked prefill: spend at most N prompt tokens "
                          "per engine step so admissions interleave with "
                          "decode (default: blocking whole-prompt prefill)")
+    ap.add_argument("--prefill-rows", type=int, default=None,
+                    help="cap on staged admissions sharing one batched "
+                         "prefill call (default: all staged; 1 = serial "
+                         "one-admission-per-step schedule)")
+    ap.add_argument("--no-bucket-prefill", action="store_true",
+                    help="disable pow-2 bucketing of packed prefill chunk "
+                         "lengths (more recompiles, zero padding waste)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route prefill/decode through the Pallas kernels")
     ap.add_argument("--temperature", type=float, default=0.0)
@@ -99,10 +106,16 @@ def main():
         param_specs(params, mesh, moe=cfg.moe is not None), mesh)
     params = jax.tree_util.tree_map(jax.device_put, params, pshard)
 
+    # a non-trivial mesh shards the slot + staging pools too (pools are
+    # device_put per serve_state_specs and constrained inside the jitted
+    # steps); a 1x1 mesh keeps the single-device fast path
+    pool_mesh = mesh if args.mesh_data * args.mesh_model > 1 else None
     engine = ServingEngine(params, cfg, max_slots=args.slots,
                            max_len=args.max_len,
                            chunk_tokens=args.chunk_tokens,
-                           seed=args.seed)
+                           seed=args.seed, mesh=pool_mesh,
+                           prefill_rows=args.prefill_rows,
+                           bucket_prefill=not args.no_bucket_prefill)
     reqs = synthetic_requests(
         args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
         prompt_range=_parse_range(args.prompt_len),
@@ -116,7 +129,9 @@ def main():
 
     print(f"serving {args.requests} requests over {args.slots} slots "
           f"(kernel={cfg.attn.kind}, max_len={args.max_len}, "
-          f"rate={args.rate or 'batch'})")
+          f"rate={args.rate or 'batch'}"
+          + (f", mesh={args.mesh_data}x{args.mesh_model}" if pool_mesh
+             is not None else "") + ")")
     results = engine.run(realtime=args.realtime)
 
     for res in sorted(results, key=lambda r: r.uid):
@@ -127,7 +142,6 @@ def main():
 
     st = engine.stats
     tpots = np.array([t for r in results for t in r.tpots])
-    ttfts = np.array([r.ttft for r in results if r.token_times])
     span = max(r.finish_time for r in results) - min(
         r.arrival_time for r in results)
     print(f"throughput: {st['emitted_tokens'] / max(span, 1e-9):.1f} tok/s "
@@ -135,14 +149,16 @@ def main():
     if tpots.size:
         print(f"per-token latency: p50={np.percentile(tpots, 50) * 1e3:.1f}ms "
               f"p99={np.percentile(tpots, 99) * 1e3:.1f}ms")
-    if ttfts.size:
-        print(f"ttft: p50={np.percentile(ttfts, 50) * 1e3:.0f}ms "
-              f"p99={np.percentile(ttfts, 99) * 1e3:.0f}ms")
+    if "ttft_p50" in st:
+        print(f"ttft: p50={st['ttft_p50'] * 1e3:.0f}ms "
+              f"p99={st['ttft_p99'] * 1e3:.0f}ms")
     print(f"slot occupancy: {st['mean_occupancy'] * 100:.0f}% over "
           f"{st['decode_steps']} decode steps")
     print(f"prefill: {st['prefill_tokens']} tokens in "
-          f"{st['prefill_chunks']} chunks "
-          f"(max {st['max_prefill_tokens_per_step']} per step)")
+          f"{st['prefill_chunks']} chunks over {st['prefill_calls']} "
+          f"batched calls ({st['prefill_rows_per_call']:.1f} rows/call, "
+          f"batch occupancy {st['prefill_batch_occupancy'] * 100:.0f}%, "
+          f"max {st['max_prefill_tokens_per_step']} tokens per step)")
 
 
 if __name__ == "__main__":

@@ -85,12 +85,14 @@ def attn_apply(params: dict, x: Array, cfg: fm.FeatureConfig, *,
 def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
                  window=None, qk_norm=False, rope_theta=10000.0,
                  max_len=None, use_kernel=False, state=None,
-                 position=None):
+                 position=None, valid_len=None):
     """Prefill one prompt chunk. ``state=None`` + ``position=None`` is the
     legacy whole-prompt call; with an incoming serve ``state`` and a chunk
     start ``position`` (() int32, or (B,) per-slot starts) the pass
     resumes: RoPE rotates at absolute positions and the attention state
-    advances from where the previous chunk left it."""
+    advances from where the previous chunk left it. ``valid_len`` ((B,)
+    int32) marks ragged rows in a padded multi-admission chunk — see
+    ``rfa.rf_attention_prefill``."""
     l = x.shape[1]
     if position is None:
         positions = jnp.arange(l)
@@ -104,7 +106,8 @@ def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
                        positions, rope_theta)
     out, state = rfa.rf_attention_prefill(
         q, k, v, params.get("feat"), cfg, window=window,
-        max_len=max_len, use_kernel=use_kernel, state=state)
+        max_len=max_len, use_kernel=use_kernel, state=state,
+        valid_len=valid_len)
     return _merge_heads(out, params), state
 
 

@@ -162,8 +162,13 @@ def init_params(key, cfg: ModelConfig) -> dict:
 
 def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
                  layer_key: Optional[Array], state=None, mode="train",
-                 position=None):
-    """Returns (x, aux_loss, new_state)."""
+                 position=None, valid_len=None):
+    """Returns (x, aux_loss, new_state).
+
+    ``valid_len`` ((B,) int32, prefill mode only) marks ragged rows of a
+    padded multi-admission chunk; every stateful mixer masks its carry so
+    padded positions leave no trace (see the per-mixer docstrings).
+    """
     aux = jnp.zeros((), jnp.float32)
     h = ll.apply_norm(cfg.norm_kind, params["ln1"], x)
     new_state = state
@@ -181,7 +186,7 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
             # step, exactly parallel to decode.
             mix, new_state = ab.attn_prefill(
                 params["attn"], h, cfg.attn, window=window,
-                state=state, position=position,
+                state=state, position=position, valid_len=valid_len,
                 use_kernel=cfg.use_kernel, **common)
         else:  # decode
             mix, new_state = ab.attn_decode(
@@ -198,7 +203,8 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
         if mode == "train":
             mix, _ = rec.rglru_apply(params["rec"], h, None)
         else:                       # prefill chunk / decode: carry state
-            mix, new_state = rec.rglru_apply(params["rec"], h, state)
+            mix, new_state = rec.rglru_apply(params["rec"], h, state,
+                                             valid_len=valid_len)
         x = x + mix
         h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
         if cfg.moe:
@@ -216,10 +222,11 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
         else:                       # prefill chunk / decode: carry state
             tstate, cshift = state
             mix, tstate = rec.rwkv6_apply(params["tmix"], h, cfg.n_heads,
-                                          tstate)
+                                          tstate, valid_len=valid_len)
             x = x + mix
             h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
-            f, cshift = rec.rwkv6_channel_mix(params["cmix"], h2, cshift)
+            f, cshift = rec.rwkv6_channel_mix(params["cmix"], h2, cshift,
+                                              valid_len=valid_len)
             x = x + f
             new_state = (tstate, cshift)
     return x, aux, new_state
@@ -437,8 +444,8 @@ def init_serve_state(cfg: ModelConfig, b: int, max_len: int,
     return state
 
 
-def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict
-                  ) -> tuple[Array, dict]:
+def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict,
+                  valid_len: Optional[Array] = None) -> tuple[Array, dict]:
     """Advance a serve state over one prompt chunk.
 
     ``state`` is a serve state from :func:`init_serve_state` (fresh) or a
@@ -449,10 +456,22 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict
     point the chunked-prefill scheduler interleaves with decode steps
     (repro/serving/engine.py); whole-prompt :func:`prefill` is the
     degenerate one-chunk schedule.
+
+    ``valid_len`` ((B,) int32) makes the chunk *ragged*: row b consumes
+    only its first ``valid_len[b]`` tokens — the rest are padding that
+    leaves no trace in the advanced state (masked PRF (S, z) updates,
+    per-row exact-cache append lengths, masked RG-LRU/RWKV carries), and
+    the returned logits are gathered at each row's last valid position.
+    This is what lets the serving engine pad several staged admissions'
+    chunks into ONE batched (B, L) call. A chunk whose rows are ALL full
+    should pass ``valid_len=None``: the masked path is mathematically the
+    identity then, but XLA may fuse it differently (f32-close, not
+    bitwise) — the engine does exactly this for its exactness contract.
     """
     x = _embed_inputs(params, cfg, batch)
     pos = state["pos"]
-    new_state: dict[str, Any] = {"pos": pos + x.shape[1]}
+    adv = x.shape[1] if valid_len is None else valid_len
+    new_state: dict[str, Any] = {"pos": pos + adv}
 
     def unit_body(x, xs):
         unit_params, unit_state = xs
@@ -461,7 +480,8 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict
             x, _, st = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
                                     layer_key=None,
                                     state=unit_state[f"b{i}"],
-                                    mode="prefill", position=pos)
+                                    mode="prefill", position=pos,
+                                    valid_len=valid_len)
             new_states[f"b{i}"] = st
         return x, new_states
 
@@ -486,9 +506,15 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict
             kind = cfg.block_pattern[i % len(cfg.block_pattern)]
             x, _, st = _apply_block(params["rem"][i], x, cfg, kind,
                                     layer_key=None, state=state["rem"][i],
-                                    mode="prefill", position=pos)
+                                    mode="prefill", position=pos,
+                                    valid_len=valid_len)
             new_state["rem"].append(st)
-    return _logits(params, cfg, x[:, -1:])[:, 0], new_state
+    if valid_len is None:
+        x_last = x[:, -1:]
+    else:                          # per-row last-valid-token gather
+        x_last = jnp.take_along_axis(
+            x, jnp.maximum(valid_len - 1, 0)[:, None, None], axis=1)
+    return _logits(params, cfg, x_last)[:, 0], new_state
 
 
 def prefill(params, cfg: ModelConfig, batch: dict, max_len: int

@@ -89,24 +89,48 @@ def _rglru_scan(x: Array, a: Array, i_gate: Array, h0: Array):
 
 
 def rglru_apply(params: dict, u: Array,
-                state: Optional[RGLRUState] = None
+                state: Optional[RGLRUState] = None,
+                valid_len: Optional[Array] = None
                 ) -> tuple[Array, RGLRUState]:
-    """u: (B, L, d_model) -> (out, new_state)."""
+    """u: (B, L, d_model) -> (out, new_state).
+
+    ``valid_len`` ((B,) int32) marks ragged rows of a padded chunk: at
+    padded steps the gate is forced to a=1 (so the input branch
+    sqrt(1-a^2)=0 vanishes and h carries through unchanged), and the conv
+    tail is gathered per row at its last valid window — the carry equals
+    the one an unpadded run over ``valid_len[b]`` tokens would produce."""
     x = u @ params["wx"]
     g = u @ params["wg"]
     prefix = None if state is None else state.conv
-    x, conv_tail = _causal_conv(x, params["conv_w"], prefix)
-    xf = x.astype(jnp.float32)
+    x_pre = x                                  # pre-conv inputs: the conv
+    x, conv_tail = _causal_conv(x, params["conv_w"], prefix)  # tail holds
+    xf = x.astype(jnp.float32)                 # these, not conv outputs
     r = jax.nn.sigmoid(xf @ params["wa"].astype(jnp.float32))
     i_gate = jax.nn.sigmoid(xf @ params["wi"].astype(jnp.float32))
     log_a = -_RGLRU_C * jax.nn.softplus(params["lam"]) * r
     a = jnp.exp(log_a)
-    b = u.shape[0]
+    b, l = u.shape[0], u.shape[1]
+    if valid_len is not None:
+        vmask = (jnp.arange(l)[None] < valid_len[:, None])[..., None]
+        a = jnp.where(vmask, a, 1.0)        # freeze h past the valid end
     h0 = (jnp.zeros((b, x.shape[-1]), jnp.float32) if state is None
           else state.h)
     hs, h_last = _rglru_scan(x, a, i_gate, h0)
+    if valid_len is not None:
+        # conv_tail from _causal_conv is xp[:, L:L+K-1]; re-gather each
+        # row's window ending at its own valid length instead
+        xp = jnp.concatenate([jnp.zeros((b, _CONV_K - 1, x_pre.shape[-1]),
+                                        x_pre.dtype) if prefix is None
+                              else prefix.astype(x_pre.dtype), x_pre],
+                             axis=1)
+        conv_tail = jax.vmap(
+            lambda row, t: jax.lax.dynamic_slice_in_dim(
+                row, t, _CONV_K - 1, axis=0))(xp, valid_len)
+        h_last = jnp.take_along_axis(
+            hs, jnp.maximum(valid_len - 1, 0)[:, None, None], axis=1)[:, 0]
     out = (hs * jax.nn.gelu(g.astype(jnp.float32))).astype(u.dtype)
-    return out @ params["wo"], RGLRUState(h=h_last, conv=conv_tail)
+    return out @ params["wo"], RGLRUState(h=h_last.astype(jnp.float32),
+                                          conv=conv_tail)
 
 
 def rglru_decode(params: dict, u: Array, state: RGLRUState
@@ -172,9 +196,15 @@ def _wkv_scan(r, k, v, w, u, s0):
 
 
 def rwkv6_apply(params: dict, x: Array, n_heads: int,
-                state: Optional[RWKVState] = None
+                state: Optional[RWKVState] = None,
+                valid_len: Optional[Array] = None
                 ) -> tuple[Array, RWKVState]:
-    """x: (B, L, d_model) -> (out, state)."""
+    """x: (B, L, d_model) -> (out, state).
+
+    ``valid_len`` ((B,) int32) marks ragged rows of a padded chunk: at
+    padded steps the decay is forced to w=1 and k to 0, so
+    S = diag(1) S + 0 carries through unchanged, and the token-shift
+    state is gathered at each row's last valid token."""
     b, l, d = x.shape
     dh = d // n_heads
     last = (jnp.zeros((b, d), x.dtype) if state is None
@@ -195,6 +225,11 @@ def rwkv6_apply(params: dict, x: Array, n_heads: int,
         "decay_b"]
     w = jnp.exp(-jnp.exp(params["lam_w"] + dd))        # (B, L, d) in (0,1)
     w = w.reshape(b, l, n_heads, dh)
+    if valid_len is not None:
+        vmask = (jnp.arange(l)[None] < valid_len[:, None]
+                 )[:, :, None, None]                   # (B, L, 1, 1)
+        w = jnp.where(vmask, w, 1.0)
+        k = jnp.where(vmask, k, 0.0)
     r, k, v, w = (jnp.moveaxis(t, 2, 1) for t in (r, k, v, w))  # (B,H,L,dh)
     s0 = (jnp.zeros((b, n_heads, dh, dh), jnp.float32) if state is None
           else state.s)
@@ -203,7 +238,11 @@ def rwkv6_apply(params: dict, x: Array, n_heads: int,
     o = ll.layernorm(params["ln_x"], o)
     o = o * jax.nn.silu(g.astype(jnp.float32)).astype(o.dtype)
     out = o.astype(x.dtype) @ params["wo"]
-    return out, RWKVState(s=s_last, shift=x[:, -1].astype(jnp.float32))
+    shift = (x[:, -1] if valid_len is None else
+             jnp.take_along_axis(
+                 x, jnp.maximum(valid_len - 1, 0)[:, None, None],
+                 axis=1)[:, 0])
+    return out, RWKVState(s=s_last, shift=shift.astype(jnp.float32))
 
 
 def init_rwkv_state(b: int, d_model: int, n_heads: int) -> RWKVState:
@@ -224,9 +263,13 @@ def rwkv6_channel_mix_init(key, d_model: int, d_ff: int,
 
 
 def rwkv6_channel_mix(params: dict, x: Array,
-                      last: Optional[Array] = None
+                      last: Optional[Array] = None,
+                      valid_len: Optional[Array] = None
                       ) -> tuple[Array, Array]:
-    """RWKV channel mix: out = sigmoid(W_r xr) * (W_v relu(W_k xk)^2)."""
+    """RWKV channel mix: out = sigmoid(W_r xr) * (W_v relu(W_k xk)^2).
+
+    ``valid_len`` ((B,) int32): the carried token-shift state is gathered
+    at each row's last valid token instead of position L-1."""
     b, l, d = x.shape
     last = jnp.zeros((b, d), x.dtype) if last is None else last.astype(
         x.dtype)
@@ -237,4 +280,8 @@ def rwkv6_channel_mix(params: dict, x: Array,
     k = jnp.square(jax.nn.relu(xk @ params["wk"]))
     out = jax.nn.sigmoid((xr @ params["wr"]).astype(jnp.float32)).astype(
         x.dtype) * (k @ params["wv"])
-    return out, x[:, -1].astype(jnp.float32)
+    shift = (x[:, -1] if valid_len is None else
+             jnp.take_along_axis(
+                 x, jnp.maximum(valid_len - 1, 0)[:, None, None],
+                 axis=1)[:, 0])
+    return out, shift.astype(jnp.float32)

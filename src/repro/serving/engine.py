@@ -13,18 +13,30 @@ device. This engine is that multiplexer:
     here — see benchmarks/serve_latency.py);
   * a device-resident **slot pool**: one serve-state pytree with
     ``max_slots`` batch rows, per-slot positions and (for the exact
-    fallback) per-slot KV write indices (repro/serving/slots.py);
-  * a **token-budgeted scheduler**: each ``step()`` spends at most
-    ``chunk_tokens`` prompt tokens on ONE admission's next chunk (the
-    admission keeps a per-slot prefill cursor and an off-pool staging
-    state), then runs one batched decode step for all active slots — so
-    a long prompt is amortized across decode steps instead of stalling
-    them. ``chunk_tokens=None`` is the blocking baseline: whole prompts
-    are prefilled at admission (the degenerate one-chunk schedule);
+    fallback) per-slot KV write indices — plus a same-shape **staging
+    pool** holding every mid-prefill admission's partial state
+    (repro/serving/slots.py);
+  * a **token-budget packer**: each ``step()`` splits at most
+    ``chunk_tokens`` prompt tokens across ALL staged admissions (FIFO,
+    ceil-divided shares) and advances them together in ONE padded
+    (P, L) ``prefill_chunk`` call — ragged rows are masked per-row
+    (``valid_len``) and chunk lengths are bucketed to powers of two so
+    compiles stay bounded by (rows <= max_slots) x (log2 length
+    buckets). ``chunk_tokens=None`` is the blocking baseline: all
+    staged admissions prefill their whole prompts in one padded call;
   * one jitted **batched decode step** that advances all slots in
-    lock-step; inactive slots are masked so their state stays bit-frozen.
-    A mid-prefill slot's state lives OFF the pool until its last chunk
-    lands, so partial prefills never perturb pool rows.
+    lock-step; inactive slots are masked so their state stays bit-frozen
+    (skipped entirely — a static fast path — when every slot is live).
+    A mid-prefill slot's state lives in the staging pool until its last
+    chunk lands, so partial prefills never perturb pool rows.
+
+Pass ``mesh=`` to place BOTH pools under a device mesh: every pool leaf
+is sharded per ``repro.parallel.serve_state_specs`` (slots over the data
+axes, head groups of the KV-cache / linear state over 'model'),
+``device_put`` at construction, donated through every step, and pinned
+with ``with_sharding_constraint`` inside the jitted step functions so
+XLA never silently migrates the pool. Decode under a mesh is
+token-identical to the unsharded engine (tests/test_distributed.py).
 
 Numerical contract: slot rows are computed elementwise over the batch
 axis, so a sequence decoded inside a busy heterogeneous batch produces
@@ -34,10 +46,11 @@ asserts this for darkformer, performer and exact kernels). Chunking a
 prompt changes the k-stabilizer trajectory (a running max instead of one
 whole-prompt max), so chunked admission matches blocking admission to
 f32 rounding — and bit-exactly when ``chunk_tokens >= prompt_len``
-(tests/test_chunked_prefill.py).
-
-Prefill compiles once per distinct chunk length, so ``chunk_tokens=N``
-also caps compiles at one per residual length < N plus the full chunk.
+(tests/test_chunked_prefill.py). Batching staged admissions into one
+padded call masks every padded position out of the advanced states, so
+batched prefill matches the serial (``prefill_rows=1``) schedule to f32
+rounding; with one staged row and ``bucket_prefill=False`` the packed
+call IS the legacy unpadded chunk, bit-for-bit.
 
 Sampling: per-request ``temperature`` / ``top_k`` / ``top_p`` are applied
 inside one jitted batched sample step; the defaults (0 / 0 / 1.0) leave
@@ -60,24 +73,26 @@ from repro.serving.request import Request, RequestResult
 Array = jax.Array
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length() if n > 1 else 1
+
+
 class _Slot:
     """Host-side record of the sequence occupying one pool row.
 
     A slot is *prefilling* while ``cursor < len(req.prompt)`` — its
-    attention state is the off-pool B=1 ``state`` pytree and it takes no
-    part in decode. Once the last chunk lands the state is scattered
-    into the pool, ``state`` drops to None and the slot decodes.
+    attention state lives in staging-pool row i and it takes no part in
+    decode. Once the last chunk lands the staged row is committed into
+    the pool and the slot decodes.
     """
 
-    __slots__ = ("req", "result", "budget", "cursor", "state")
+    __slots__ = ("req", "result", "budget", "cursor")
 
-    def __init__(self, req: Request, result: RequestResult, budget: int,
-                 state):
+    def __init__(self, req: Request, result: RequestResult, budget: int):
         self.req = req
         self.result = result
         self.budget = budget
         self.cursor = 0
-        self.state = state
 
 
 class ServingEngine:
@@ -90,27 +105,56 @@ class ServingEngine:
         eng.submit(Request(prompt=[...], max_new_tokens=64))
         results = eng.run()
 
-    or drive it step-by-step (one prefill chunk + one batched decode per
-    ``step()``) and ``submit`` more requests while others are mid-decode.
+    or drive it step-by-step (one batched prefill chunk + one batched
+    decode per ``step()``) and ``submit`` more requests while others are
+    mid-decode.
+
+    ``prefill_rows`` caps how many staged admissions share the packed
+    prefill call (None = all staged, i.e. up to ``max_slots``; 1 =
+    the serial one-admission-per-step schedule of the pre-batching
+    engine). ``bucket_prefill`` pads packed chunk lengths up to powers
+    of two to bound recompiles; disable it for bit-exact parity with
+    the serial unpadded schedule at P=1. ``mesh`` shards the slot and
+    staging pools per ``serve_state_specs`` (see module docstring).
     """
 
     def __init__(self, params, cfg: lm.ModelConfig, *, max_slots: int = 4,
                  max_len: int = 256, chunk_tokens: Optional[int] = None,
-                 seed: int = 0):
+                 seed: int = 0, mesh=None,
+                 prefill_rows: Optional[int] = None,
+                 bucket_prefill: bool = True):
         if cfg.modality != "text":
             raise ValueError("serving engine drives text decode only")
         if chunk_tokens is not None and chunk_tokens < 1:
             raise ValueError("chunk_tokens must be >= 1")
+        if prefill_rows is not None and prefill_rows < 1:
+            raise ValueError("prefill_rows must be >= 1 (None = no cap)")
         self.params = params
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
         self.chunk_tokens = chunk_tokens
+        self.prefill_rows = prefill_rows
+        self.bucket_prefill = bucket_prefill
+        self.mesh = mesh
         self.pool = lm.init_serve_state(cfg, b=max_slots, max_len=max_len,
                                         per_slot=True)
-        # immutable template scattered per admission; every prefill chain
-        # starts from this fresh B=1 state
-        self._fresh = lm.init_serve_state(cfg, b=1, max_len=max_len)
+        # fixed-size staging pool: row i holds the partial prefill state
+        # of the admission reserved on slot i (same pytree as the pool)
+        self.staging = lm.init_serve_state(cfg, b=max_slots,
+                                           max_len=max_len, per_slot=True)
+        # immutable one-row template scattered at admission; every
+        # prefill chain starts from this fresh per-slot row
+        self._fresh_row = lm.init_serve_state(cfg, b=1, max_len=max_len,
+                                              per_slot=True)
+
+        pool_shardings = None
+        if mesh is not None:
+            from repro.parallel import serve_state_specs, make_shardings
+            pool_shardings = make_shardings(
+                serve_state_specs(self.pool, mesh), mesh)
+            self.pool = jax.device_put(self.pool, pool_shardings)
+            self.staging = jax.device_put(self.staging, pool_shardings)
 
         self._slots: list[Optional[_Slot]] = [None] * max_slots
         self._active = np.zeros(max_slots, bool)
@@ -123,24 +167,49 @@ class ServingEngine:
         self._key = jax.random.PRNGKey(seed)
         self._step_count = 0
         self._t0: Optional[float] = None
+        self._ttfts: list[float] = []
         self._stats = {"decode_steps": 0, "decode_slot_steps": 0,
                        "prefill_tokens": 0, "prefill_chunks": 0,
+                       "prefill_calls": 0, "prefill_padded_tokens": 0,
+                       "prefill_rows_max": 0,
                        "max_prefill_tokens_per_step": 0,
                        "emitted_tokens": 0, "admitted": 0, "finished": 0}
 
         cfg_ = cfg  # closed over by the jitted steps
 
-        def _decode(params, pool, toks, active):
+        def _constrain(tree):
+            if pool_shardings is None:
+                return tree
+            return jax.lax.with_sharding_constraint(tree, pool_shardings)
+
+        def _decode(params, pool, toks, active, all_active):
             logits, new = lm.decode_step(params, cfg_, toks, pool)
-            return logits, slot_ops.freeze_inactive(pool, new, active)
+            new = slot_ops.freeze_inactive(pool, new, active,
+                                           all_active=all_active)
+            return logits, _constrain(new)
 
-        def _prefill_chunk(params, tokens, state):
-            # (1, V) last-chunk-position logits + advanced B=1 state
-            return lm.prefill_chunk(params, cfg_, {"tokens": tokens},
-                                    state)
+        def _prefill(params, staging, toks, idx, valid_len):
+            # gather the P staged rows, advance them over one padded
+            # (P, L) chunk, scatter them back — ONE device program per
+            # step regardless of how many admissions are in flight
+            sub = slot_ops.read_slots(staging, idx)
+            logits, new = lm.prefill_chunk(params, cfg_, {"tokens": toks},
+                                           sub, valid_len=valid_len)
+            return logits, _constrain(slot_ops.write_slots(staging, new,
+                                                           idx))
 
-        def _write(pool, st, idx):
-            return slot_ops.write_slot(pool, st, idx)
+        def _commit(pool, staging, idx):
+            # finished admissions: copy staged rows into the slot pool
+            rows = slot_ops.read_slots(staging, idx)
+            return _constrain(slot_ops.write_slots(pool, rows, idx))
+
+        def _reset(staging, fresh, idx):
+            # one scatter resets every slot admitted this step: the
+            # one-row fresh template is broadcast along the slot axis
+            k = idx.shape[0]
+            fresh_k = slot_ops.tree_slot_map(
+                lambda p, axis: jnp.repeat(p, k, axis=axis), fresh)
+            return _constrain(slot_ops.write_slots(staging, fresh_k, idx))
 
         def _sample_plain(key, logits, temps):
             # greedy / plain-temperature rows only: skips the two
@@ -172,13 +241,13 @@ class ServingEngine:
             drawn = jax.random.categorical(key, masked, axis=-1)
             return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(1,))
-        self._write_fn = jax.jit(_write, donate_argnums=(0,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
+                                  static_argnums=(4,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
+        self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
+        self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
         self._sample_fn = jax.jit(_sample)
         self._sample_plain_fn = jax.jit(_sample_plain)
-        # one jit wrapper; XLA caches one executable per chunk length
-        # (chunk_tokens caps the number of distinct lengths)
-        self._prefill_chunk_fn = jax.jit(_prefill_chunk)
 
     # -- clock ------------------------------------------------------------
 
@@ -190,14 +259,32 @@ class ServingEngine:
     # -- client API -------------------------------------------------------
 
     def submit(self, req: Union[Request, Sequence[int]], **kw) -> int:
-        """Queue a request (or a bare token prompt). Returns its uid."""
+        """Queue a request (or a bare token prompt). Returns its uid.
+
+        Validates everything that would otherwise fail opaquely (or
+        silently clamp) inside the jitted step functions: empty prompts,
+        prompts that don't fit the per-slot ``max_len`` context budget
+        alongside at least one generated token, out-of-vocab token ids,
+        and degenerate sampling parameters.
+        """
         if not isinstance(req, Request):
             req = Request(prompt=list(req), **kw)
         if len(req.prompt) == 0:
-            raise ValueError("empty prompt")
-        if len(req.prompt) >= self.max_len:
+            raise ValueError("empty prompt: a request must carry at least "
+                             "one prompt token")
+        if len(req.prompt) + 1 > self.max_len:
             raise ValueError(
-                f"prompt length {len(req.prompt)} >= max_len {self.max_len}")
+                f"prompt length {len(req.prompt)} does not fit max_len "
+                f"{self.max_len}: a slot's context page must hold the "
+                f"prompt plus at least one generated token "
+                f"(prompt <= max_len - 1 = {self.max_len - 1})")
+        lo, hi = min(req.prompt), max(req.prompt)
+        if lo < 0 or hi >= self.cfg.vocab:
+            raise ValueError(
+                f"prompt token ids must lie in the vocab range "
+                f"[0, {self.cfg.vocab}) (got min={lo}, max={hi}); "
+                f"out-of-range ids would be silently clamped by the "
+                f"embedding gather inside jit")
         if req.max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (admission "
                              "always samples the first token)")
@@ -268,13 +355,15 @@ class ServingEngine:
             jnp.full((1,), req.top_p, jnp.float32))[0])
 
     def _admissions(self, now: float) -> None:
-        """Reserve a free slot (prefill cursor 0, fresh staging state)
-        for every arrived request, FIFO."""
+        """Reserve a free slot (prefill cursor 0, freshly reset staging
+        row) for every arrived request, FIFO. The step's staging-row
+        resets are batched into one scatter."""
+        admitted: list[int] = []
         while self._queue and self._queue[0].arrival_time <= now:
             free = [i for i in range(self.max_slots)
                     if self._slots[i] is None]
             if not free:
-                return
+                break
             req = self._queue.pop(0)
             result = RequestResult(uid=req.uid,
                                    prompt=list(map(int, req.prompt)),
@@ -282,36 +371,103 @@ class ServingEngine:
             # exact-cache pages hold max_len keys: prompt + decoded tokens
             budget = min(req.max_new_tokens,
                          self.max_len - len(req.prompt))
-            self._slots[free[0]] = _Slot(req, result, budget, self._fresh)
+            self._slots[free[0]] = _Slot(req, result, budget)
+            admitted.append(free[0])
             self._prefill_order.append(free[0])
+        if admitted:
+            self.staging = self._reset_fn(
+                self.staging, self._fresh_row,
+                jnp.asarray(admitted, jnp.int32))
 
-    def _advance_prefill(self, i: int) -> Optional[Array]:
-        """Run slot i's next prompt chunk. Returns the chunk's logits
-        when the prompt is finished, else None."""
-        slot = self._slots[i]
-        prompt = slot.req.prompt
-        remaining = len(prompt) - slot.cursor
-        t = (remaining if self.chunk_tokens is None
-             else min(self.chunk_tokens, remaining))
-        tok = jnp.asarray(
-            np.asarray(prompt[slot.cursor:slot.cursor + t], np.int32)[None])
-        logits, slot.state = self._prefill_chunk_fn(self.params, tok,
-                                                    slot.state)
-        slot.cursor += t
-        self._stats["prefill_tokens"] += t
-        self._stats["prefill_chunks"] += 1
-        return logits if slot.cursor == len(prompt) else None
+    def _plan_prefill(self) -> list[tuple[int, int]]:
+        """Token-budget packer: split this step's prompt-token budget
+        across the staged admissions, FIFO. Returns [(slot, tokens)].
+
+        Blocking mode (``chunk_tokens=None``) grants every staged
+        admission its full remaining prompt. Chunked mode ceil-divides
+        the remaining budget over the remaining admissions at each FIFO
+        position, so the oldest admission gets at least its fair share
+        and short tails free budget for the rows behind them — at most
+        ``chunk_tokens`` prompt tokens total run between two decode
+        steps (the invariant the latency benchmark measures).
+        """
+        staged = self._prefill_order
+        if self.prefill_rows is not None:
+            staged = staged[:self.prefill_rows]
+        grants: list[tuple[int, int]] = []
+        if self.chunk_tokens is None:
+            for i in staged:
+                slot = self._slots[i]
+                grants.append((i, len(slot.req.prompt) - slot.cursor))
+            return grants
+        budget = self.chunk_tokens
+        for j, i in enumerate(staged):
+            if budget <= 0:
+                break
+            slot = self._slots[i]
+            rem = len(slot.req.prompt) - slot.cursor
+            share = -(-budget // (len(staged) - j))      # ceil division
+            t = min(rem, share)
+            grants.append((i, t))
+            budget -= t
+        return grants
+
+    def _prefill_work(self) -> None:
+        """Advance every scheduled admission by its granted chunk in ONE
+        padded batched ``prefill_chunk`` call, then commit + activate the
+        admissions whose prompts finished (also batched)."""
+        grants = self._plan_prefill()
+        if not grants:
+            return
+        ts = np.asarray([t for _, t in grants], np.int32)
+        l_pad = int(ts.max())
+        if self.bucket_prefill:
+            l_pad = _next_pow2(l_pad)
+        toks = np.zeros((len(grants), l_pad), np.int32)
+        for r, (i, t) in enumerate(grants):
+            slot = self._slots[i]
+            toks[r, :t] = slot.req.prompt[slot.cursor:slot.cursor + t]
+        # all-full rows take the legacy unpadded path (bit-exact with the
+        # serial schedule); ragged rows carry per-row valid lengths
+        vl = None if (ts == l_pad).all() else jnp.asarray(ts)
+        idx = jnp.asarray([i for i, _ in grants], jnp.int32)
+        logits, self.staging = self._prefill_fn(
+            self.params, self.staging, jnp.asarray(toks), idx, vl)
+
+        spent = int(ts.sum())
+        self._stats["prefill_tokens"] += spent
+        self._stats["prefill_chunks"] += len(grants)
+        self._stats["prefill_calls"] += 1
+        self._stats["prefill_padded_tokens"] += len(grants) * l_pad
+        self._stats["prefill_rows_max"] = max(
+            self._stats["prefill_rows_max"], len(grants))
+        self._stats["max_prefill_tokens_per_step"] = max(
+            self._stats["max_prefill_tokens_per_step"], spent)
+
+        done: list[tuple[int, int]] = []
+        for r, (i, t) in enumerate(grants):
+            slot = self._slots[i]
+            slot.cursor += t
+            if slot.cursor == len(slot.req.prompt):
+                done.append((r, i))
+        if not done:
+            return
+        self.pool = self._commit_fn(
+            self.pool, self.staging,
+            jnp.asarray([i for _, i in done], jnp.int32))
+        for r, i in done:
+            self._prefill_order.remove(i)
+            self._finish_admission(i, logits[r:r + 1])
 
     def _finish_admission(self, i: int, logits: Array) -> None:
-        """Scatter the staged state into pool row i and activate it."""
+        """Activate pool row i (already committed from staging)."""
         slot = self._slots[i]
-        self.pool = self._write_fn(self.pool, slot.state, jnp.int32(i))
-        slot.state = None
         first = self._sample_one(slot.req, logits)
         now = self._now()
         slot.result.admit_time = now
         slot.result.tokens = [first]
         slot.result.token_times = [now]
+        self._ttfts.append(now - slot.req.arrival_time)
         self._active[i] = True
         self._temps[i] = slot.req.temperature
         self._top_ks[i] = slot.req.top_k
@@ -320,35 +476,11 @@ class ServingEngine:
         self._stats["emitted_tokens"] += 1
         self._stats["admitted"] += 1
 
-    def _prefill_work(self) -> None:
-        """Spend this step's prefill budget.
-
-        Chunked (``chunk_tokens=N``): at most one chunk (<= N prompt
-        tokens) of the oldest mid-prefill admission — the invariant the
-        latency benchmark measures is that no more than N prompt tokens
-        ever run between consecutive batched decode steps. Blocking
-        (``chunk_tokens=None``): every pending admission prefills its
-        whole prompt now.
-        """
-        spent = 0
-        while self._prefill_order:
-            i = self._prefill_order[0]
-            before = self._slots[i].cursor
-            logits = self._advance_prefill(i)
-            spent += self._slots[i].cursor - before
-            if logits is not None:
-                self._prefill_order.pop(0)
-                self._finish_admission(i, logits)
-            if self.chunk_tokens is not None:
-                break                      # one chunk per step, at most
-        self._stats["max_prefill_tokens_per_step"] = max(
-            self._stats["max_prefill_tokens_per_step"], spent)
-
     # -- decode -----------------------------------------------------------
 
     def step(self) -> list[RequestResult]:
-        """Admit what has arrived, run one prompt chunk (if an admission
-        is mid-prefill), one batched decode step over the active slots,
+        """Admit what has arrived, run one batched prefill chunk over the
+        staged admissions, one batched decode step over the active slots,
         and evict finished sequences. Returns newly finished results
         (possibly empty)."""
         finished: list[RequestResult] = []
@@ -362,9 +494,11 @@ class ServingEngine:
             return finished
 
         self._step_count += 1
+        # static all-active flag: a fully occupied pool skips the
+        # pool-wide freeze select (bit-identical either way)
         logits, self.pool = self._decode_fn(
             self.params, self.pool, jnp.asarray(self._toks),
-            jnp.asarray(self._active))
+            jnp.asarray(self._active), bool(self._active.all()))
         key = jax.random.fold_in(self._key, self._step_count)
         # host-side check: only pay the full-vocab sort/cumsum masks when
         # some active row actually uses top-k/p (the masks are identity
@@ -436,4 +570,15 @@ class ServingEngine:
         # fraction of slot-steps that carried a live sequence
         s["mean_occupancy"] = (s["decode_slot_steps"]
                                / (steps * self.max_slots))
+        # fraction of the padded (P x L) prefill compute spent on real
+        # prompt tokens, and how many admissions each call advanced
+        s["prefill_batch_occupancy"] = (
+            s["prefill_tokens"] / s["prefill_padded_tokens"]
+            if s["prefill_padded_tokens"] else 1.0)
+        s["prefill_rows_per_call"] = (
+            s["prefill_chunks"] / s["prefill_calls"]
+            if s["prefill_calls"] else 0.0)
+        if self._ttfts:
+            s["ttft_p50"] = float(np.percentile(self._ttfts, 50))
+            s["ttft_p99"] = float(np.percentile(self._ttfts, 99))
         return s

@@ -1,9 +1,18 @@
-"""Slot-pool pytree surgery for the continuous-batching engine.
+"""Slot-layout module: pytree surgery for the engine's device pools.
 
-The engine's device state is one big serve-state pytree built by
-``lm.init_serve_state(cfg, b=max_slots, per_slot=True)``. Slot i of the
-pool is batch row i of every leaf, but the slot axis is NOT uniform
-across the tree:
+The engine keeps TWO device-resident pools, both built by
+``lm.init_serve_state(cfg, b=max_slots, per_slot=True)``:
+
+  * the **slot pool** — one serve-state row per decoding sequence; and
+  * the **staging pool** — a fixed-size pool of mid-prefill rows (one
+    per staged admission, indexed by its reserved slot), replacing the
+    old per-slot host-held B=1 staging states. Keeping staged rows in
+    one pool is what lets a batched multi-admission prefill gather P
+    rows, advance them in ONE padded (P, L) ``prefill_chunk`` call, and
+    scatter them back.
+
+Slot i of a pool is batch row i of every leaf, but the slot axis is NOT
+uniform across the tree:
 
   * ``state["units"]`` leaves are stacked over scanned layer units, so
     they carry a leading (n_units,) axis and the slot axis is **1**;
@@ -12,11 +21,13 @@ across the tree:
   * scalar per-sequence leaves produced by a B=1 prefill (``pos``, the
     exact-cache ``length``) have NO slot axis and are broadcast in.
 
-All engine mutations reduce to three primitives here — gather a slot,
-scatter a (B=1) state into a slot, and a masked freeze of inactive
-slots — each written once over that axis map instead of per leaf.
-These run inside the engine's jitted step functions; ``idx`` and
-``active`` are traced, so admission at any slot reuses one compile.
+All engine mutations reduce to the primitives here — multi-index
+gather/scatter (``read_slots`` / ``write_slots``), their single-slot
+dynamic-slice forms, and a masked freeze of inactive slots — each
+written once over that axis map instead of per leaf. These run inside
+the engine's jitted step functions; ``idx`` and ``active`` are traced,
+so admission at any slot reuses one compile (one executable per
+distinct index-vector LENGTH for the multi-index forms).
 """
 from __future__ import annotations
 
@@ -43,8 +54,35 @@ def tree_slot_map(fn, pool: dict, *others: dict) -> dict:
     return out
 
 
+def write_slots(pool: dict, new: dict, idx: Array) -> dict:
+    """Scatter a P-row serve state into slots ``idx`` ((P,) int32).
+
+    ``new`` must be a per-slot state whose slot axis has size P at the
+    same position as ``pool``'s (e.g. the result of :func:`read_slots`,
+    or a batched ``prefill_chunk`` advance of one). Rows land at
+    ``pool[..., idx[p], ...] = new[..., p, ...]``; duplicate indices
+    follow XLA scatter semantics (last write wins) — the engine never
+    produces them.
+    """
+    def _write(p, n, axis):
+        n = jnp.asarray(n).astype(p.dtype)
+        # scatter at the slot axis directly — no moveaxis, which would
+        # materialize a transposed copy of the whole pool per call
+        ix = (slice(None),) * axis + (idx,)
+        return p.at[ix].set(n)
+    return tree_slot_map(_write, pool, new)
+
+
+def read_slots(pool: dict, idx: Array) -> dict:
+    """Gather slots ``idx`` ((P,) int32) as a P-row per-slot serve state
+    (slot axis kept, so the result round-trips through write_slots)."""
+    def _read(p, axis):
+        return jnp.take(p, idx, axis=axis)
+    return tree_slot_map(_read, pool)
+
+
 def write_slot(pool: dict, new: dict, idx: Array) -> dict:
-    """Scatter a single-sequence serve state into slot ``idx``.
+    """Scatter a single-sequence serve state into slot ``idx`` (() int32).
 
     ``new`` is the state returned by a B=1 ``lm.prefill`` (or a B=1
     decode chain): its batch axis has size 1 where present, and its
@@ -61,21 +99,31 @@ def write_slot(pool: dict, new: dict, idx: Array) -> dict:
 
 
 def read_slot(pool: dict, idx: Array) -> dict:
-    """Gather slot ``idx`` back out as a B=1 serve state (keeps the
-    size-1 slot axis so the result round-trips through write_slot)."""
+    """Gather slot ``idx`` (() int32) back out as a B=1 serve state
+    (keeps the size-1 slot axis so the result round-trips through
+    write_slot)."""
     def _read(p, axis):
         return jax.lax.dynamic_slice_in_dim(p, idx, 1, axis=axis)
     return tree_slot_map(_read, pool)
 
 
-def freeze_inactive(pool_old: dict, pool_new: dict, active: Array) -> dict:
+def freeze_inactive(pool_old: dict, pool_new: dict, active: Array,
+                    all_active: bool = False) -> dict:
     """Keep ``pool_new`` where ``active`` (bool (S,)), else ``pool_old``.
 
     Decode always advances all S slots in lock-step; this masks the
     write-back so evicted/empty slots stay bit-frozen instead of
     accumulating garbage (and so the exact-cache write index of a free
     slot cannot run past the end of its page).
+
+    ``all_active`` is a STATIC fast path: when the caller knows on the
+    host that every slot is live (a fully-occupied decode step — the
+    common case under load), the pool-wide select is the identity and is
+    skipped entirely. The result is bit-identical either way.
     """
+    if all_active:
+        return pool_new
+
     def _sel(old, new, axis):
         shape = [1] * old.ndim
         shape[axis] = active.shape[0]

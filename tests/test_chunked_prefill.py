@@ -250,6 +250,240 @@ def test_admission_waits_for_full_pool():
 
 
 # ---------------------------------------------------------------------------
+# batched multi-admission prefill (ISSUE 3 tentpole)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["darkformer", "exact"])
+def test_ragged_padded_chunk_matches_serial_rows(kind):
+    """One padded (2, L) prefill_chunk with ragged valid_len advances each
+    row exactly as its own unpadded B=1 chunk would (states + logits)."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    lens = (5, 3)
+    prompts = [_prompt(cfg.vocab, l, seed=80 + l) for l in lens]
+    # serial: each row alone, unpadded
+    serial = [lm.prefill_chunk(params, cfg,
+                               {"tokens": jnp.asarray([p])},
+                               lm.init_serve_state(cfg, b=1, max_len=32,
+                                                   per_slot=True))
+              for p in prompts]
+    # batched: rows padded to L=5, per-row valid lengths
+    toks = np.zeros((2, max(lens)), np.int32)
+    for r, p in enumerate(prompts):
+        toks[r, :len(p)] = p
+    st = lm.init_serve_state(cfg, b=2, max_len=32, per_slot=True)
+    lg, st = lm.prefill_chunk(params, cfg, {"tokens": jnp.asarray(toks)},
+                              st, valid_len=jnp.asarray(lens, jnp.int32))
+    for r in range(2):
+        np.testing.assert_allclose(np.asarray(lg[r]),
+                                   np.asarray(serial[r][0][0]), atol=1e-4)
+        for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(st)[0],
+                jax.tree_util.tree_flatten_with_path(serial[r][1])[0]):
+            axis = 1 if "units" in jax.tree_util.keystr(pa) else 0
+            np.testing.assert_allclose(
+                np.take(np.asarray(a, np.float32), [r], axis=axis),
+                np.asarray(b, np.float32),
+                atol=1e-4, err_msg=(kind, jax.tree_util.keystr(pa)))
+
+
+@pytest.mark.parametrize("arch", ["recurrentgemma-2b", "rwkv6-7b"])
+def test_ragged_chunk_recurrent_arch_matches_serial_rows(arch):
+    """Masked RG-LRU / RWKV carries: a recurrent-arch padded ragged
+    chunk advances every carry (rglru h/conv, rwkv wkv S / token
+    shifts) exactly like unpadded per-row chunks."""
+    cfg = cfgs.get_config(arch, reduced=True)
+    params = _params(cfg)
+    lens = (6, 2)
+    prompts = [_prompt(cfg.vocab, l, seed=90 + l) for l in lens]
+    serial = [lm.prefill_chunk(params, cfg,
+                               {"tokens": jnp.asarray([p])},
+                               lm.init_serve_state(cfg, b=1, max_len=32,
+                                                   per_slot=True))
+              for p in prompts]
+    toks = np.zeros((2, max(lens)), np.int32)
+    for r, p in enumerate(prompts):
+        toks[r, :len(p)] = p
+    st = lm.init_serve_state(cfg, b=2, max_len=32, per_slot=True)
+    lg, st = lm.prefill_chunk(params, cfg, {"tokens": jnp.asarray(toks)},
+                              st, valid_len=jnp.asarray(lens, jnp.int32))
+    for r in range(2):
+        np.testing.assert_allclose(np.asarray(lg[r]),
+                                   np.asarray(serial[r][0][0]), atol=1e-4)
+        for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(st)[0],
+                jax.tree_util.tree_flatten_with_path(serial[r][1])[0]):
+            axis = 1 if "units" in jax.tree_util.keystr(pa) else 0
+            np.testing.assert_allclose(
+                np.take(np.asarray(a, np.float32), [r], axis=axis),
+                np.asarray(b, np.float32),
+                atol=1e-4, err_msg=jax.tree_util.keystr(pa))
+
+
+def test_ragged_exact_chunk_at_page_end_writes_correctly():
+    """Regression: a padded chunk near the end of an exact-cache page has
+    idx + l_pad > lmax; a dynamic-slice write would CLAMP its start and
+    shift every valid key. The masked gather-scatter must land row b's
+    valid_len[b] tokens at exactly [idx, idx + valid_len)."""
+    cfg = _cfg("exact")
+    params = _params(cfg)
+    max_len = 16
+    prompts = [_prompt(cfg.vocab, 15, seed=130),
+               _prompt(cfg.vocab, 14, seed=131)]
+    # serial: 12-token chunk then the remainder, each row alone
+    serial = []
+    for p in prompts:
+        st = lm.init_serve_state(cfg, b=1, max_len=max_len, per_slot=True)
+        _, st = lm.prefill_chunk(params, cfg,
+                                 {"tokens": jnp.asarray([p[:12]])}, st)
+        lg, st = lm.prefill_chunk(params, cfg,
+                                  {"tokens": jnp.asarray([p[12:]])}, st)
+        serial.append((lg, st))
+    # batched: both rows to cursor 12, then a ragged (3, 2) tail padded
+    # to l_pad=8 -> idx=12, 12 + 8 > 16 exercises the would-be clamp
+    st = lm.init_serve_state(cfg, b=2, max_len=max_len, per_slot=True)
+    _, st = lm.prefill_chunk(
+        params, cfg, {"tokens": jnp.asarray([p[:12] for p in prompts])},
+        st)
+    tails = np.zeros((2, 8), np.int32)
+    tails[0, :3] = prompts[0][12:]
+    tails[1, :2] = prompts[1][12:]
+    lg, st = lm.prefill_chunk(params, cfg, {"tokens": jnp.asarray(tails)},
+                              st, valid_len=jnp.asarray([3, 2], jnp.int32))
+    for r in range(2):
+        np.testing.assert_allclose(np.asarray(lg[r]),
+                                   np.asarray(serial[r][0][0]), atol=1e-4)
+        for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(st)[0],
+                jax.tree_util.tree_flatten_with_path(serial[r][1])[0]):
+            axis = 1 if "units" in jax.tree_util.keystr(pa) else 0
+            np.testing.assert_allclose(
+                np.take(np.asarray(a, np.float32), [r], axis=axis),
+                np.asarray(b, np.float32),
+                atol=1e-4, err_msg=jax.tree_util.keystr(pa))
+
+
+def test_full_valid_len_matches_unpadded():
+    """valid_len == L on every row is mathematically the identity over
+    the unpadded path — logits and states agree to f32 rounding (XLA may
+    fuse the masked program differently, so bitwise equality is NOT the
+    contract here; the engine's bit-exact path comes from passing
+    valid_len=None whenever every packed row is full)."""
+    for arch in ("smollm-135m", "recurrentgemma-2b", "rwkv6-7b"):
+        cfg = cfgs.get_config(arch, reduced=True)
+        params = _params(cfg)
+        toks = jnp.asarray([_prompt(cfg.vocab, 7, seed=95)])
+        st0 = lm.init_serve_state(cfg, b=1, max_len=32, per_slot=True)
+        lg_a, st_a = lm.prefill_chunk(params, cfg, {"tokens": toks}, st0)
+        lg_b, st_b = lm.prefill_chunk(params, cfg, {"tokens": toks}, st0,
+                                      valid_len=jnp.asarray([7],
+                                                            jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg_a), np.asarray(lg_b),
+                                   atol=1e-4)
+        for (pa, a), (_, b) in zip(
+                jax.tree_util.tree_flatten_with_path(st_a)[0],
+                jax.tree_util.tree_flatten_with_path(st_b)[0]):
+            np.testing.assert_allclose(
+                np.asarray(a, np.float32), np.asarray(b, np.float32),
+                atol=1e-4, err_msg=(arch, jax.tree_util.keystr(pa)))
+
+
+@pytest.mark.parametrize("kind", ["darkformer", "exact"])
+def test_engine_batches_staged_admissions_into_one_call(kind):
+    """With >= 2 admissions staged and chunk_tokens fixed, every step
+    runs exactly ONE prefill-chunk call covering multiple rows, and the
+    streams match the serial (prefill_rows=1) schedule."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    prompts = [_prompt(cfg.vocab, l, seed=100 + l) for l in (21, 18, 15)]
+
+    eng = ServingEngine(params, cfg, max_slots=4, max_len=64,
+                        chunk_tokens=8)
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=5))
+            for p in prompts]
+    calls_before = eng.stats["prefill_calls"]
+    eng.step()               # 3 staged rows -> one (3, L) packed call
+    st = eng.stats
+    assert st["prefill_calls"] == calls_before + 1
+    assert st["prefill_rows_max"] == 3
+    assert st["prefill_chunks"] == 3             # one row-chunk each
+    assert st["max_prefill_tokens_per_step"] <= 8
+    got = {r.uid: r.tokens for r in eng.run()}
+    st = eng.stats
+    # budget 8 over 3 admissions -> every step advanced all staged rows
+    # in one call; rows/call must exceed 1 on average
+    assert st["prefill_rows_per_call"] > 1.0
+    assert 0.0 < st["prefill_batch_occupancy"] <= 1.0
+    assert "ttft_p50" in st and "ttft_p99" in st
+
+    serial = ServingEngine(params, cfg, max_slots=4, max_len=64,
+                           chunk_tokens=8, prefill_rows=1)
+    uids_s = [serial.submit(Request(prompt=p, max_new_tokens=5))
+              for p in prompts]
+    got_s = {r.uid: r.tokens for r in serial.run()}
+    assert [got[u] for u in uids] == [got_s[u] for u in uids_s], kind
+
+
+def test_engine_p1_unbucketed_matches_serial_bitwise():
+    """prefill_rows=1 + bucket_prefill=False is the pre-batching
+    scheduler: one unpadded chunk of the oldest admission per step —
+    streams must equal the chunk-chained B=1 reference exactly."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prompt = _prompt(cfg.vocab, 19, seed=110)
+    ref = _reference_greedy(params, cfg, prompt, 6, max_len=64)
+
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=64,
+                        chunk_tokens=64, prefill_rows=1,
+                        bucket_prefill=False)
+    uid = eng.submit(Request(prompt=prompt, max_new_tokens=6))
+    got = {r.uid: r.tokens for r in eng.run()}
+    assert got[uid] == ref
+    assert eng.stats["prefill_rows_max"] == 1
+
+
+def test_blocking_mode_batches_all_pending_admissions():
+    """chunk_tokens=None still admits every pending request in the step
+    it arrives — now through one padded whole-prompt batched call."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prompts = [_prompt(cfg.vocab, l, seed=120 + l) for l in (9, 14)]
+    refs = [_reference_greedy(params, cfg, p, 4, max_len=48)
+            for p in prompts]
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=48)
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=4))
+            for p in prompts]
+    eng.step()
+    st = eng.stats
+    assert st["prefill_calls"] == 1 and st["prefill_rows_max"] == 2
+    assert eng.num_active == 2
+    got = {r.uid: r.tokens for r in eng.run()}
+    for uid, ref in zip(uids, refs):
+        assert got[uid] == ref
+
+
+def test_submit_validates_vocab_and_budget():
+    """Out-of-vocab ids and over-budget prompts fail loudly at submit()
+    instead of clamping/overflowing inside jit."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, max_slots=1, max_len=16)
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(prompt=[0, cfg.vocab]))
+    with pytest.raises(ValueError, match="vocab"):
+        eng.submit(Request(prompt=[-1, 2]))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=_prompt(cfg.vocab, 16, seed=1)))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(prompt=[]))
+    # boundary: max_len - 1 prompt tokens leave room for one new token
+    uid = eng.submit(Request(prompt=_prompt(cfg.vocab, 15, seed=1),
+                             max_new_tokens=8))
+    res = {r.uid: r for r in eng.run()}[uid]
+    assert len(res.tokens) == 1                 # budget-clamped
+
+
+# ---------------------------------------------------------------------------
 # per-request sampling params
 # ---------------------------------------------------------------------------
 

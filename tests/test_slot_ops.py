@@ -1,0 +1,130 @@
+"""Property tests for the slot-layout module (repro/serving/slots.py).
+
+The pool primitives are pure pytree surgery, so their contracts are
+crisp and hypothesis-checkable across the heterogeneous serve-state
+layouts (stacked scanned units at slot axis 1, remainder layers and
+``pos`` at axis 0, PRF vs exact-cache vs RWKV state leaves):
+
+  * ``write_slots`` then ``read_slots`` at the same indices is the
+    identity on the written rows, and a no-op on every other row;
+  * the multi-index forms agree with the single-slot dynamic-slice
+    forms;
+  * ``freeze_inactive`` keeps exactly the inactive rows, and its
+    static ``all_active`` fast path is bit-identical to the masked
+    select when every row is live.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import configs as cfgs
+from repro.models import lm
+from repro.serving import slots as slot_ops
+
+ARCHS = {
+    "darkformer": lambda: cfgs.darkify(
+        cfgs.get_config("smollm-135m", reduced=True), "darkformer"),
+    "exact": lambda: cfgs.darkify(
+        cfgs.get_config("smollm-135m", reduced=True), "exact"),
+    "rwkv": lambda: cfgs.get_config("rwkv6-7b", reduced=True),
+}
+N_SLOTS = 4
+
+
+def _pool(kind, seed=0, b=N_SLOTS):
+    """A slot pool with distinguishable random contents per row."""
+    cfg = ARCHS[kind]()
+    pool = lm.init_serve_state(cfg, b=b, max_len=16, per_slot=True)
+    leaves, treedef = jax.tree_util.tree_flatten(pool)
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for i, leaf in enumerate(leaves):
+        if jnp.issubdtype(leaf.dtype, jnp.floating):
+            out.append(jax.random.normal(jax.random.fold_in(key, i),
+                                         leaf.shape, leaf.dtype))
+        else:
+            out.append(jax.random.randint(jax.random.fold_in(key, i),
+                                          leaf.shape, 0, 13
+                                          ).astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _rows_equal(tree_a, tree_b, row_a, row_b):
+    """Assert slot row_a of tree_a == slot row_b of tree_b, every leaf."""
+    fa = jax.tree_util.tree_flatten_with_path(tree_a)[0]
+    fb = jax.tree_util.tree_flatten_with_path(tree_b)[0]
+    for (pa, a), (_, b) in zip(fa, fb):
+        axis = 1 if "units" in jax.tree_util.keystr(pa) else 0
+        np.testing.assert_array_equal(
+            np.take(np.asarray(a), row_a, axis=axis),
+            np.take(np.asarray(b), row_b, axis=axis),
+            err_msg=jax.tree_util.keystr(pa))
+
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+@given(seed=st.integers(0, 10_000), data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_write_read_slots_roundtrip(kind, seed, data):
+    """Scatter P distinct rows from one pool into another, gather them
+    back: written rows round-trip exactly, untouched rows stay frozen."""
+    perm = list(np.random.RandomState(seed).permutation(N_SLOTS))
+    p = data.draw(st.integers(1, N_SLOTS))
+    idx = jnp.asarray(perm[:p], jnp.int32)
+    dst = _pool(kind, seed=1)
+    src = _pool(kind, seed=2)
+    rows = slot_ops.read_slots(src, idx)
+    out = slot_ops.write_slots(dst, rows, idx)
+    back = slot_ops.read_slots(out, idx)
+    for r in range(p):
+        _rows_equal(back, src, r, int(idx[r]))          # round-trip
+        _rows_equal(out, src, int(idx[r]), int(idx[r]))
+    for other in set(range(N_SLOTS)) - set(int(i) for i in idx):
+        _rows_equal(out, dst, other, other)             # untouched
+
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+def test_multi_index_agrees_with_single_slot_forms(kind):
+    """write_slots/read_slots at one index == write_slot/read_slot."""
+    pool = _pool(kind, seed=3)
+    src = _pool(kind, seed=4)
+    one = slot_ops.read_slots(src, jnp.asarray([2], jnp.int32))
+    a = slot_ops.write_slots(pool, one, jnp.asarray([1], jnp.int32))
+    b = slot_ops.write_slot(pool, slot_ops.read_slot(src, jnp.int32(2)),
+                            jnp.int32(1))
+    for (pa, x), (_, y) in zip(
+            jax.tree_util.tree_flatten_with_path(a)[0],
+            jax.tree_util.tree_flatten_with_path(b)[0]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=jax.tree_util.keystr(pa))
+
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+@given(mask_bits=st.integers(0, 2 ** N_SLOTS - 1))
+@settings(max_examples=12, deadline=None)
+def test_freeze_inactive_masks_exactly(kind, mask_bits):
+    """Active rows take the new pool, inactive rows keep the old —
+    row-exact across every leaf layout."""
+    old = _pool(kind, seed=5)
+    new = _pool(kind, seed=6)
+    active = np.array([(mask_bits >> i) & 1 == 1 for i in range(N_SLOTS)])
+    out = slot_ops.freeze_inactive(old, new, jnp.asarray(active))
+    for i in range(N_SLOTS):
+        _rows_equal(out, new if active[i] else old, i, i)
+
+
+@pytest.mark.parametrize("kind", sorted(ARCHS))
+def test_freeze_all_active_fast_path_is_identity(kind):
+    """The static all_active fast path must be bit-identical to the
+    masked select with an all-True mask (it skips the select)."""
+    old = _pool(kind, seed=7)
+    new = _pool(kind, seed=8)
+    ones = jnp.ones((N_SLOTS,), bool)
+    masked = slot_ops.freeze_inactive(old, new, ones)
+    fast = slot_ops.freeze_inactive(old, new, ones, all_active=True)
+    for (pa, x), (_, y) in zip(
+            jax.tree_util.tree_flatten_with_path(masked)[0],
+            jax.tree_util.tree_flatten_with_path(fast)[0]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=jax.tree_util.keystr(pa))
