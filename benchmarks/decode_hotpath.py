@@ -1,0 +1,228 @@
+"""Decode hot-path bench: fused megakernel vs two-kernel vs jnp.
+
+Measures the serving engine's steady-state unit of work — ONE batched
+decode step — at several slot counts, through three implementations of
+the PRF attention decode:
+
+  * ``jnp``         — pure-jnp feature map + einsum state update
+    (``rf_attention_decode(use_kernel=False)``);
+  * ``two_kernel``  — the pre-ISSUE-4 Pallas path: jnp
+    ``_resume_qk_features`` + the ``prf_decode_step`` state-update
+    kernel, with the (N, m) feature tensors round-tripping HBM between
+    them;
+  * ``fused``       — the ``prf_fused_decode`` megakernel: projection,
+    exp feature map with in-kernel running-max stabilizer, (S, z)
+    update and readout in one kernel, pool aliased in place.
+
+Two levels: raw attention-op latency (isolates the kernel change) and
+full ``lm.decode_step`` latency / tokens/s on the reduced bench model
+(includes the layer-stacked scan the engine runs). Snapshot written to
+``experiments/bench/BENCH_decode.json`` with the methodology recorded —
+on this CPU container the kernels run in interpret mode, so absolute
+numbers are simulation-level; the RELATIVE ordering (what the
+trajectory tracks) is the claim. Schema is validated on every write and
+by the CI bench-smoke job (``--validate``).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as rfa
+from repro.core import feature_maps as fm
+from repro.models import lm
+from benchmarks.common import bench_cfg, load_result, save_result, \
+    time_call
+
+SCHEMA_VERSION = 1
+REQUIRED_ROW_KEYS = ("slots", "us_jnp", "us_two_kernel", "us_fused",
+                     "fused_speedup_vs_two_kernel", "tok_s_fused")
+REQUIRED_LM_KEYS = ("slots", "us_jnp", "us_two_kernel", "us_fused",
+                    "tok_s_fused")
+
+
+def run_attention_level(slot_counts, *, g=1, hg=4, d=16, m=32,
+                        iters=30) -> list[dict]:
+    """Per-token latency of the attention decode op alone, three ways."""
+    cfg = fm.FeatureConfig(kind="darkformer", num_features=m)
+    fparams = fm.init_feature_params(jax.random.PRNGKey(0), cfg, d,
+                                     n_groups=g)
+    proj = fm.precompose_projection(fparams, cfg.kind)
+    rows = []
+    for b in slot_counts:
+        state = rfa.init_linear_serve_state(b, g, hg, m, d)
+        key = jax.random.PRNGKey(b)
+        q = jax.random.normal(key, (b, g, hg, 1, d))
+        k = jax.random.normal(jax.random.fold_in(key, 1), (b, g, 1, 1, d))
+        v = jax.random.normal(jax.random.fold_in(key, 2), (b, g, 1, 1, d))
+
+        def mk(**kw):
+            return jax.jit(lambda q, k, v, s: rfa.rf_attention_decode(
+                q, k, v, s, fparams, cfg, **kw))
+
+        fns = {"jnp": mk(),
+               "two_kernel": mk(use_kernel=True),
+               "fused": mk(use_kernel=True, proj=proj)}
+        row = {"slots": b}
+        for name, fn in fns.items():
+            row[f"us_{name}"] = time_call(lambda fn=fn: fn(q, k, v, state),
+                                          iters=iters)
+        row["fused_speedup_vs_two_kernel"] = (row["us_two_kernel"]
+                                              / max(row["us_fused"], 1e-9))
+        row["tok_s_fused"] = b / (row["us_fused"] * 1e-6)
+        rows.append(row)
+        print(f"  attn slots={b}: jnp={row['us_jnp']:.0f}us "
+              f"two-kernel={row['us_two_kernel']:.0f}us "
+              f"fused={row['us_fused']:.0f}us "
+              f"({row['fused_speedup_vs_two_kernel']:.2f}x, "
+              f"{row['tok_s_fused']:.0f} tok/s)", flush=True)
+    return rows
+
+
+def run_lm_level(slot_counts, *, iters=12) -> list[dict]:
+    """Full layer-stacked ``lm.decode_step`` latency — what one engine
+    decode step costs end to end (embed + L scanned blocks + logits)."""
+    rows = []
+    cfg = bench_cfg("darkformer", m=32)
+    import dataclasses
+    cfg_k = dataclasses.replace(cfg, use_kernel=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    proj = lm.build_decode_proj(params, cfg_k, stacked=True)
+    for b in slot_counts:
+        state = lm.init_serve_state(cfg, b=b, max_len=64, per_slot=True,
+                                    stacked=True)
+        toks = jnp.zeros((b,), jnp.int32)
+        fns = {
+            "jnp": jax.jit(lambda p, t, s: lm.decode_step(p, cfg, t, s)),
+            "two_kernel": jax.jit(lambda p, t, s: lm.decode_step(
+                p, cfg_k, t, s, fused=False)),
+            "fused": jax.jit(lambda p, t, s: lm.decode_step(
+                p, cfg_k, t, s, proj=proj)),
+        }
+        row = {"slots": b}
+        for name, fn in fns.items():
+            row[f"us_{name}"] = time_call(
+                lambda fn=fn: fn(params, toks, state)[0], iters=iters)
+        row["tok_s_fused"] = b / (row["us_fused"] * 1e-6)
+        rows.append(row)
+        print(f"  lm   slots={b}: jnp={row['us_jnp']:.0f}us "
+              f"two-kernel={row['us_two_kernel']:.0f}us "
+              f"fused={row['us_fused']:.0f}us "
+              f"({row['tok_s_fused']:.0f} tok/s)", flush=True)
+    return rows
+
+
+def validate(payload: dict, require_win: bool = True) -> list[str]:
+    """Schema check keeping the perf trajectory machine-readable.
+    Returns a list of problems (empty == valid). ``require_win`` also
+    enforces the ISSUE-4 acceptance bar (fused < two-kernel at >= 2
+    slot counts) — on for tracked snapshots, off for noisy CI smoke
+    machines where only the schema is the contract."""
+    errs = []
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version != {SCHEMA_VERSION}")
+    meth = payload.get("methodology", {})
+    for key in ("backend", "kernel_mode", "timing"):
+        if not isinstance(meth.get(key), str):
+            errs.append(f"methodology.{key} missing")
+    for section, req in (("attention", REQUIRED_ROW_KEYS),
+                         ("lm_decode", REQUIRED_LM_KEYS)):
+        rows = payload.get(section)
+        if not isinstance(rows, list) or not rows:
+            errs.append(f"{section}: missing/empty rows")
+            continue
+        for row in rows:
+            for key in req:
+                if not isinstance(row.get(key), (int, float)):
+                    errs.append(f"{section}: row {row.get('slots')} "
+                                f"lacks numeric {key!r}")
+    if require_win:
+        wins = [r for r in payload.get("attention", [])
+                if isinstance(r.get("fused_speedup_vs_two_kernel"),
+                              (int, float))
+                and r["fused_speedup_vs_two_kernel"] > 1.0]
+        if len(wins) < 2:
+            errs.append("fused must beat the two-kernel path at >= 2 "
+                        "slot counts (acceptance bar of ISSUE 4)")
+    return errs
+
+
+def run(fast: bool = True) -> dict:
+    slot_counts = (4, 16, 64) if fast else (4, 16, 64, 256)
+    lm_counts = (2, 8) if fast else (2, 8, 32)
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "methodology": {
+            "backend": jax.default_backend(),
+            "kernel_mode": ("interpret" if jax.default_backend() != "tpu"
+                            else "mosaic"),
+            "timing": "median wall time over warm jit calls "
+                      "(benchmarks.common.time_call); one batched decode "
+                      "step per call",
+            "geometry": "attention: G=1 Hg=4 d=16 m=32 darkformer; "
+                        "lm: benchmarks.common.bench_cfg "
+                        "(4L d64 m=32, layer-stacked decode)",
+            "note": "CPU interpret-mode numbers — relative ordering is "
+                    "the tracked claim, absolute us are simulation-level",
+        },
+        "attention": run_attention_level(slot_counts,
+                                         iters=30 if fast else 50),
+        "lm_decode": run_lm_level(lm_counts, iters=10 if fast else 20),
+    }
+    errs = validate(payload)
+    if errs:
+        raise SystemExit("BENCH_decode schema invalid: " + "; ".join(errs))
+    # benchmarks.run keys its cache (and CSV line) off the bench name
+    biggest = payload["attention"][-1]
+    payload["us_per_call"] = biggest["us_fused"]
+    payload["derived"] = biggest["fused_speedup_vs_two_kernel"]
+    save_result("decode_hotpath", payload)
+    path = save_result("BENCH_decode", payload)
+    print(f"wrote {path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny slot counts / few iters (CI bench-smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="add the 256-slot cell")
+    ap.add_argument("--validate", action="store_true",
+                    help="only validate the committed snapshot's schema")
+    args = ap.parse_args()
+    if args.validate:
+        payload = load_result("BENCH_decode")
+        if payload is None:
+            raise SystemExit("no BENCH_decode.json snapshot to validate")
+        errs = validate(payload)
+        if errs:
+            raise SystemExit("invalid snapshot: " + "; ".join(errs))
+        print("BENCH_decode.json schema OK "
+              f"({len(payload['attention'])} attention rows, "
+              f"{len(payload['lm_decode'])} lm rows)")
+        return
+    if args.smoke:
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "methodology": {
+                "backend": jax.default_backend(),
+                "kernel_mode": "interpret",
+                "timing": "smoke run (CI)",
+            },
+            "attention": run_attention_level((2, 8), iters=5),
+            "lm_decode": run_lm_level((2,), iters=3),
+        }
+        errs = validate(payload, require_win=False)
+        if errs:
+            raise SystemExit("smoke schema invalid: " + "; ".join(errs))
+        print("bench smoke OK")
+        return
+    run(fast=not args.full)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

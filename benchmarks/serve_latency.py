@@ -71,12 +71,21 @@ def run_context_scaling(fast: bool = True) -> dict:
 
 def run_engine_traffic(fast: bool = True, rate: float = 4.0,
                        slots: int = 4) -> dict:
-    """Poisson open-loop traffic through the continuous-batching engine."""
+    """Poisson open-loop traffic through the continuous-batching engine.
+
+    The ``darkformer+fused`` row is the same traffic with
+    ``use_kernel=True`` — decode through the fused megakernel with the
+    engine-precomposed projections — giving the engine-level
+    before/after of the ISSUE-4 decode restructure."""
     n_req = 8 if fast else 32
     out = {}
-    for kind in ("darkformer", "exact"):
+    for label in ("darkformer", "darkformer+fused", "exact"):
+        kind, _, variant = label.partition("+")
         cfg = cfgs.get_config("smollm-135m", reduced=True)
         cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
+        if variant == "fused":
+            import dataclasses
+            cfg = dataclasses.replace(cfg, use_kernel=True)
         params = lm.init_params(jax.random.PRNGKey(0), cfg)
         eng = ServingEngine(params, cfg, max_slots=slots, max_len=96,
                             chunk_tokens=8)
@@ -103,8 +112,8 @@ def run_engine_traffic(fast: bool = True, rate: float = 4.0,
             "mean_occupancy": st["mean_occupancy"],
             "decode_steps": st["decode_steps"],
         }
-        out[kind] = row
-        print(f"  engine[{kind}]: {row['tok_per_s']:.1f} tok/s, "
+        out[label] = row
+        print(f"  engine[{label}]: {row['tok_per_s']:.1f} tok/s, "
               f"tpot p50={row['tpot_p50_ms']:.1f}ms "
               f"p99={row['tpot_p99_ms']:.1f}ms, "
               f"occupancy={row['mean_occupancy'] * 100:.0f}%", flush=True)

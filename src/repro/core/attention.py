@@ -33,8 +33,14 @@ import jax.numpy as jnp
 
 from repro.core import feature_maps as fm
 from repro.core import linear_attention as la
+# module-level: the wrappers resolve interpret-vs-TPU once; importing
+# inside the hot functions re-ran the import machinery on every trace
+from repro.kernels import ops as kops
 
 Array = jax.Array
+
+# feature kinds with a decode-time PRF state (and hence a fused path)
+PRF_KINDS = fm.PRF_KINDS
 
 
 def _scale_qk(q: Array, k: Array) -> tuple[Array, Array]:
@@ -146,7 +152,6 @@ def rf_attention(q: Array, k: Array, v: Array, fparams: Optional[dict],
     if not causal:
         return la.linear_attention_noncausal(qf, kf, vv, eps=cfg.eps)
     if use_kernel:
-        from repro.kernels import ops as kops
         return kops.linear_attention_causal(qf, kf, vv, eps=cfg.eps)
     return la.linear_attention_causal_chunked(qf, kf, vv, chunk=chunk,
                                               eps=cfg.eps)
@@ -283,7 +288,6 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
         kfb = jnp.broadcast_to(kf, (b, g, hg, l, cfg.num_features))
         vv = jnp.broadcast_to(v, (b, g, hg, l, dv))
         if use_kernel:
-            from repro.kernels import ops as kops
             out = kops.linear_attention_causal(qf, kfb, vv, eps=cfg.eps)
         else:
             out = la.linear_attention_causal_chunked(qf, kfb, vv,
@@ -306,7 +310,6 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
     s0 = state.s * rescale
     z0 = state.z * rescale[..., 0]
     if use_kernel:
-        from repro.kernels import ops as kops
         out, s, z = kops.linear_attention_prefill_chunk(
             qf, kfb, vv, s0, z0, chunk=chunk, eps=cfg.eps)
     else:
@@ -338,13 +341,19 @@ def _exact_decode(qs, ks, v, state: AttnServeState,
 def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
                         cfg: fm.FeatureConfig, *,
                         window: Optional[int] = None,
-                        use_kernel: bool = False):
+                        use_kernel: bool = False,
+                        proj: Optional[dict] = None):
     """One-token decode. q: (B,G,Hg,1,d); k,v: (B,G,1,1,d).
 
     ``state.length`` (exact) may be () for lock-step batches or (B,) for
     per-slot decode; the linear state is per-slot by construction. With
-    ``use_kernel`` the linear (S, z) update + readout runs through the
-    Pallas ``prf_decode_step`` kernel instead of the jnp einsums.
+    ``use_kernel`` the linear path runs through Pallas — fully fused
+    when ``proj`` carries the precomposed projection
+    (``fm.precompose_projection``): ONE ``prf_fused_decode`` megakernel
+    does projection, feature map, in-kernel stabilizer rescale, (S, z)
+    update and readout with the state aliased in place. Without
+    ``proj`` the legacy two-stage path (jnp ``_resume_qk_features`` +
+    ``prf_decode_step``) is kept as the oracle.
     """
     b, g, hg, _, _ = q.shape
     dv = v.shape[-1]
@@ -353,6 +362,14 @@ def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
         return _exact_decode(qs, ks, v, state, window, v.dtype)
 
     qs, ks = _scale_qk(q, k)
+    if use_kernel and proj is not None and cfg.kind in PRF_KINDS:
+        out, s, z, c = kops.fused_prf_decode(
+            qs[..., 0, :], ks[:, :, 0, 0, :], v[:, :, 0, 0, :],
+            proj["a"], proj.get("m_mat"), state.s, state.z,
+            state.c[:, :, 0, 0, 0], stabilize=cfg.stabilize,
+            eps=cfg.eps)
+        return (out.astype(v.dtype)[..., None, :],
+                state._replace(s=s, z=z, c=c[:, :, None, None, None]))
     # Online rescale of the k stabilizer — shared with the resumed
     # prefill chunk (decode is its one-token case).
     qf, kf, c_new, rescale = _resume_qk_features(qs, ks, fparams, cfg,
@@ -361,7 +378,6 @@ def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
     vv = jnp.broadcast_to(v[:, :, :, 0], (b, g, hg, dv))
     qf1 = qf[..., 0, :]                            # (B,G,Hg,m)
     if use_kernel:
-        from repro.kernels import ops as kops
         out, s, z = kops.linear_attention_decode_step(
             qf1, kfb, vv.astype(jnp.float32), state.s, state.z,
             rescale[..., 0, 0], eps=cfg.eps)

@@ -40,6 +40,10 @@ Array = jax.Array
 FEATURE_KINDS = ("exact", "performer", "darkformer", "lfk", "trig",
                  "random", "constant")
 
+# kinds with a decode-time PRF (S, z, c) state — and hence a fused
+# decode path (precompose_projection / prf_fused_decode)
+PRF_KINDS = ("performer", "darkformer", "lfk")
+
 
 @dataclasses.dataclass(frozen=True)
 class FeatureConfig:
@@ -188,6 +192,30 @@ def qk_features(q: Array, k: Array, w: Array, kind: str,
     qf = jnp.exp(qraw - c) / jnp.sqrt(m)
     kf = jnp.exp(kraw - c) / jnp.sqrt(m)
     return qf, kf
+
+
+def precompose_projection(fparams: dict, kind: str) -> dict:
+    """Fold W and M into one decode-time projection A = (W M)^T.
+
+    The fused decode megakernel (kernels/prf_fused_decode.py) computes
+    raw logits as a SINGLE matmul ``x @ A`` instead of the chained
+    ``(x M^T) W^T``; composing A once — at engine build, not per token
+    — removes a serial matmul from the per-token hot path. ``m_mat``
+    rides along for the darkformer norm term ‖Mx‖²/2 (None for the
+    isotropic performer/lfk kinds, whose norm is ‖x‖²/2).
+
+    ``fparams``: {"w": (..., m, r)[, "m_mat": (..., r, d)]} with any
+    leading (layer-stack, group) axes. Returns {"a": (..., d, m),
+    "m_mat": (..., r, d) | None} in f32.
+    """
+    if kind not in PRF_KINDS:
+        raise ValueError(f"no decode projection for kind {kind!r}")
+    w = fparams["w"].astype(jnp.float32)
+    if kind == "darkformer":
+        m_mat = fparams["m_mat"].astype(jnp.float32)
+        a = jnp.einsum("...mr,...rd->...dm", w, m_mat)
+        return {"a": a, "m_mat": m_mat}
+    return {"a": jnp.swapaxes(w, -1, -2), "m_mat": None}
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,11 @@ differentiable wrapper in ops.py):
   * prf_featmap       — fused phi(x) = exp(W Mx - ||Mx||^2/2 - c)/sqrt(m)
   * prf_decode_step   — fused one-token serving update of the (S, z)
     prefix state with online-stabilizer rescale (forward-only)
+  * prf_fused_decode  — the decode MEGAKERNEL: projection -> exp feature
+    map with in-kernel running-max stabilizer -> rank-1 (S, z) update ->
+    readout, pool aliased in place (forward-only; subsumes the
+    prf_featmap + prf_decode_step pair on the serving hot path)
 """
 from repro.kernels import ops, ref
-from repro.kernels.ops import (linear_attention_causal,
+from repro.kernels.ops import (fused_prf_decode, linear_attention_causal,
                                linear_attention_decode_step, prf_featmap)

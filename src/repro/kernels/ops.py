@@ -124,6 +124,33 @@ def linear_attention_decode_step(qf: Array, kf: Array, v: Array,
 
 
 # ---------------------------------------------------------------------------
+# Fused data-aligned decode megakernel (serving)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.prf_fused_decode import prf_fused_decode_fwd  # noqa: E402
+
+
+def fused_prf_decode(q: Array, k: Array, v: Array, a: Array,
+                     m_mat: Array | None, s: Array, z: Array, c: Array,
+                     *, stabilize: bool = True, eps: float = 1e-6,
+                     block_b: int = 8):
+    """One-token PRF decode fully fused: raw scaled q/k in, advanced
+    (S, z, c) pool out, with the projection/featmap/stabilizer/update/
+    readout chain in one kernel and the pool aliased in place.
+
+    q: (B, G, Hg, d); k, v: (B, G, d|dv); a: (G, d, m) precomposed
+    (W M)^T (see ``feature_maps.precompose_projection``); m_mat:
+    (G, r, d) or None; s: (B, G, Hg, m, dv); z: (B, G, Hg, m);
+    c: (B, G). Forward-only (decode is inference; no VJP).
+    Returns (out (B, G, Hg, dv) f32, s_new, z_new, c_new (B, G)).
+    """
+    return prf_fused_decode_fwd(
+        q, k, v.astype(jnp.float32), a, m_mat, s, z, c,
+        stabilize=stabilize, eps=eps, block_b=block_b,
+        interpret=_use_interpret())
+
+
+# ---------------------------------------------------------------------------
 # Fused PRF feature map
 # ---------------------------------------------------------------------------
 

@@ -115,3 +115,49 @@ def wkv6_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
                  for t in (r, k, v, w))
     s_last, outs = jax.lax.scan(step, s0.astype(jnp.float32), args)
     return jnp.moveaxis(outs, 0, 1), s_last
+
+
+def prf_fused_decode_ref(q: Array, k: Array, v: Array, a: Array,
+                         m_mat: Array | None, s: Array, z: Array,
+                         c: Array, *, stabilize: bool = True,
+                         eps: float = 1e-6):
+    """Fused data-aligned PRF decode oracle — projection, exp feature
+    map with the online running-max k-stabilizer, rank-1 (S, z) update
+    and readout, all from RAW scaled q/k.
+
+    q: (B, G, Hg, d); k, v: (B, G, d|dv); a: (G, d, m) precomposed
+    (W M)^T; m_mat: (G, r, d) or None (isotropic norm); s: (B, G, Hg,
+    m, dv); z: (B, G, Hg, m); c: (B, G). Returns (out, s_new, z_new,
+    c_new), f32.
+    """
+    f32 = jnp.float32
+    q, k, v, a, s, z, c = (t.astype(f32)
+                           for t in (q, k, v, a, s, z, c))
+    m = a.shape[-1]
+    inv_sqrt_m = m ** -0.5
+
+    def raw(x, eq):
+        logits = jnp.einsum(eq + ",gdm->" + eq.replace("d", "m"), x, a)
+        xt = x if m_mat is None else jnp.einsum(
+            eq + ",grd->" + eq.replace("d", "r"), x,
+            m_mat.astype(f32))
+        return logits - 0.5 * jnp.sum(xt * xt, -1, keepdims=True)
+
+    qraw = raw(q, "bghd")                                # (B, G, Hg, m)
+    kraw = raw(k, "bgd")                                 # (B, G, m)
+    if stabilize:
+        qf = jnp.exp(qraw - jnp.max(qraw, -1, keepdims=True)) * inv_sqrt_m
+        c_new = jnp.maximum(c, jnp.max(kraw, -1))
+        rho = jnp.exp(c - c_new)
+        kf = jnp.exp(kraw - c_new[..., None]) * inv_sqrt_m
+    else:
+        qf = jnp.exp(qraw) * inv_sqrt_m
+        c_new = jnp.zeros_like(c)
+        rho = jnp.exp(c)
+        kf = jnp.exp(kraw) * inv_sqrt_m
+    r4 = rho[:, :, None, None, None]                     # (B,G,1,1,1)
+    s_new = s * r4 + kf[:, :, None, :, None] * v[:, :, None, None, :]
+    z_new = z * rho[:, :, None, None] + kf[:, :, None, :]
+    num = jnp.einsum("bghm,bghmd->bghd", qf, s_new)
+    den = jnp.einsum("bghm,bghm->bgh", qf, z_new)[..., None]
+    return num / (den + eps), s_new, z_new, c_new

@@ -20,6 +20,7 @@ Examples:
 from __future__ import annotations
 
 import argparse
+import sys
 
 import jax
 import numpy as np
@@ -71,7 +72,11 @@ def main():
                     help="disable pow-2 bucketing of packed prefill chunk "
                          "lengths (more recompiles, zero padding waste)")
     ap.add_argument("--use-kernel", action="store_true",
-                    help="route prefill/decode through the Pallas kernels")
+                    help="route prefill/decode through the Pallas kernels "
+                         "(decode = the fused prf_fused_decode megakernel "
+                         "with engine-precomposed projections); PRF kinds "
+                         "only — warns and is ignored for --kernel exact, "
+                         "whose softmax decode has no Pallas path")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="per-request top-k sampling (0 = off)")
@@ -93,8 +98,15 @@ def main():
                              f"(choose from {', '.join(servable)})")
         cfg = cfgs.darkify(cfg, args.kernel, cfg.attn.num_features)
     if args.use_kernel:
-        import dataclasses
-        cfg = dataclasses.replace(cfg, use_kernel=True)
+        if cfg.attn.kind == "exact":
+            # previously accepted silently while doing nothing — the
+            # exact softmax decode has no Pallas path to select
+            print("warning: --use-kernel has no effect with the 'exact' "
+                  "kernel (Pallas paths exist for the PRF kinds only); "
+                  "ignoring the flag", file=sys.stderr)
+        else:
+            import dataclasses
+            cfg = dataclasses.replace(cfg, use_kernel=True)
     if cfg.modality != "text":
         raise SystemExit("serving engine drives text decode only")
     mesh = mesh_lib.make_local_mesh(args.mesh_data, args.mesh_model)

@@ -113,10 +113,12 @@ def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
 
 def attn_decode(params, x, state, cfg, *, n_heads, n_kv, d_head,
                 position, window=None, qk_norm=False, rope_theta=10000.0,
-                use_kernel=False):
+                use_kernel=False, proj=None):
     """x: (B, 1, d_model); position: () int32 current index, or (B,)
     int32 per-slot positions (continuous batching — each slot RoPE-rotates
-    by its own sequence position)."""
+    by its own sequence position). ``proj`` is the block's precomposed
+    decode projection (``fm.precompose_projection``) selecting the fused
+    megakernel path under ``use_kernel``."""
     if position.ndim == 0:
         positions = position[None]                       # (1,) -> all rows
     else:
@@ -126,7 +128,8 @@ def attn_decode(params, x, state, cfg, *, n_heads, n_kv, d_head,
     out, state = rfa.rf_attention_decode(q, k, v, state,
                                          params.get("feat"), cfg,
                                          window=window,
-                                         use_kernel=use_kernel)
+                                         use_kernel=use_kernel,
+                                         proj=proj)
     return _merge_heads(out, params), state
 
 

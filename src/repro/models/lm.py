@@ -162,12 +162,14 @@ def init_params(key, cfg: ModelConfig) -> dict:
 
 def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
                  layer_key: Optional[Array], state=None, mode="train",
-                 position=None, valid_len=None):
+                 position=None, valid_len=None, proj=None):
     """Returns (x, aux_loss, new_state).
 
     ``valid_len`` ((B,) int32, prefill mode only) marks ragged rows of a
     padded multi-admission chunk; every stateful mixer masks its carry so
     padded positions leave no trace (see the per-mixer docstrings).
+    ``proj`` (decode mode) is the block's precomposed decode projection
+    selecting the fused megakernel path under ``cfg.use_kernel``.
     """
     aux = jnp.zeros((), jnp.float32)
     h = ll.apply_norm(cfg.norm_kind, params["ln1"], x)
@@ -191,7 +193,8 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
         else:  # decode
             mix, new_state = ab.attn_decode(
                 params["attn"], h, state, cfg.attn, position=position,
-                window=window, use_kernel=cfg.use_kernel, **common)
+                window=window, use_kernel=cfg.use_kernel, proj=proj,
+                **common)
         x = x + mix
         h2 = ll.apply_norm(cfg.norm_kind, params["ln2"], x)
         if cfg.moe:
@@ -404,6 +407,85 @@ def loss_fn(params, cfg: ModelConfig, batch: dict,
 # ---------------------------------------------------------------------------
 # Serving: prefill + decode
 # ---------------------------------------------------------------------------
+#
+# Layer-stacked serving layout: a HOMOGENEOUS block pattern (every layer
+# the same kind — the darkformer/performer/exact/rwkv configs) collapses
+# the per-unit {"b0", "b1", ...} trees into ONE tree whose leaves carry a
+# leading (n_layers,) axis, and the jitted serving steps lax.scan a
+# single compiled layer body over it. One executable regardless of
+# depth: compile time and per-token dispatch overhead stop scaling with
+# L. Heterogeneous patterns (recurrentgemma's ("rec","rec","local"))
+# keep the per-unit scan with the pattern unrolled inside the body.
+# A stacked serve state holds the layer tree under state["layers"]
+# instead of state["units"]/state["rem"] (the slot axis moves to 1 for
+# every layer leaf — repro/serving/slots.py and
+# repro.parallel.serve_state_specs understand both layouts).
+
+
+def can_stack_layers(cfg: ModelConfig) -> bool:
+    """True when every layer is the same block kind (and scanned), so
+    serving states and params can stack along one leading layer axis."""
+    return (cfg.scan_layers and cfg.n_units > 0 and cfg.n_rem == 0
+            and len(set(cfg.block_pattern)) == 1)
+
+
+def stack_layer_params(params: dict, cfg: ModelConfig) -> dict:
+    """One block tree with leaves (n_layers, ...): layer u*k + i is
+    pattern position i of unit u. For the common k = 1 patterns this is
+    just ``params["units"]["b0"]`` — no copy. For k > 1 the interleave
+    materializes a stacked copy, so engines stack ONCE at build and
+    pass it back through ``params["layers"]`` (the serving steps prefer
+    that key over re-stacking per call)."""
+    units = params["units"]
+    k = len(cfg.block_pattern)
+    if k == 1:
+        return units["b0"]
+
+    def interleave(*leaves):
+        st = jnp.stack(leaves, axis=1)             # (U, k, ...)
+        return st.reshape((-1,) + st.shape[2:])
+    return jax.tree_util.tree_map(
+        interleave, *[units[f"b{i}"] for i in range(k)])
+
+
+def build_decode_proj(params: dict, cfg: ModelConfig,
+                      stacked: bool = False) -> Optional[dict]:
+    """Precompose every attention layer's decode projection A = (W M)^T
+    (``fm.precompose_projection``) — ONCE, at engine build, so the fused
+    decode megakernel never re-derives it per token. Returns a pytree
+    mirroring the serve-state layout ({"layers": ...} when ``stacked``,
+    else {"units": {"b<i>": ...}, "rem": [...]} with None at non-PRF
+    blocks), or None when the config has no fused path.
+
+    ``decode_step`` builds this on the fly when not given one (inside
+    the caller's jit — same composition, bit-identical A), so engines
+    that precompute and engines that don't agree exactly.
+    """
+    if not (cfg.use_kernel and cfg.attn.kind in fm.PRF_KINDS):
+        return None
+    if not any(k in ("attn", "local") for k in cfg.layer_kinds()):
+        return None
+    if stacked:
+        sp = (params["layers"] if "layers" in params
+              else stack_layer_params(params, cfg))
+        return {"layers": fm.precompose_projection(sp["attn"]["feat"],
+                                                   cfg.attn.kind)}
+    proj: dict[str, Any] = {}
+    if cfg.n_units > 0:
+        proj["units"] = {
+            f"b{i}": (fm.precompose_projection(
+                params["units"][f"b{i}"]["attn"]["feat"], cfg.attn.kind)
+                if kind in ("attn", "local") else None)
+            for i, kind in enumerate(cfg.block_pattern)}
+    if cfg.n_rem:
+        proj["rem"] = [
+            (fm.precompose_projection(params["rem"][i]["attn"]["feat"],
+                                      cfg.attn.kind)
+             if cfg.block_pattern[i % len(cfg.block_pattern)]
+             in ("attn", "local") else None)
+            for i in range(cfg.n_rem)]
+    return proj
+
 
 def _init_block_state(cfg: ModelConfig, kind: str, b: int, max_len: int,
                       per_slot: bool = False):
@@ -420,14 +502,33 @@ def _init_block_state(cfg: ModelConfig, kind: str, b: int, max_len: int,
 
 
 def init_serve_state(cfg: ModelConfig, b: int, max_len: int,
-                     per_slot: bool = False) -> dict:
+                     per_slot: bool = False,
+                     stacked: bool = False) -> dict:
     """Initial serving state for a batch of b sequences.
 
     ``per_slot`` turns the state into a continuous-batching slot pool:
     ``pos`` (and the exact-attention cache lengths) become (b,) vectors so
     every batch row advances independently (see repro.serving).
+
+    ``stacked`` (requires :func:`can_stack_layers`) lays the per-layer
+    states along ONE leading (n_layers,) axis under ``state["layers"]``
+    so the serving steps scan a single layer body — the engine's layout
+    for homogeneous configs.
     """
     state: dict[str, Any] = {}
+    if stacked:
+        if not can_stack_layers(cfg):
+            raise ValueError(
+                f"{cfg.name}: stacked serve states need a homogeneous "
+                f"scanned block pattern (got {cfg.block_pattern}, "
+                f"n_rem={cfg.n_rem}, scan_layers={cfg.scan_layers})")
+        kind0 = cfg.block_pattern[0]
+        state["layers"] = jax.vmap(
+            lambda _: _init_block_state(cfg, kind0, b, max_len,
+                                        per_slot))(
+            jnp.arange(cfg.n_layers))
+        state["pos"] = jnp.zeros((b,) if per_slot else (), jnp.int32)
+        return state
     if cfg.n_units > 0:
         def one_unit(_):
             return {f"b{i}": _init_block_state(cfg, kind, b, max_len,
@@ -472,6 +573,29 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict,
     pos = state["pos"]
     adv = x.shape[1] if valid_len is None else valid_len
     new_state: dict[str, Any] = {"pos": pos + adv}
+
+    if "layers" in state:                  # layer-stacked homogeneous
+        kind0 = cfg.block_pattern[0]
+        sp = (params["layers"] if "layers" in params
+              else stack_layer_params(params, cfg))
+
+        def layer_body(x, xs):
+            layer_params, layer_state = xs
+            x, _, st = _apply_block(layer_params, x, cfg, kind0,
+                                    layer_key=None, state=layer_state,
+                                    mode="prefill", position=pos,
+                                    valid_len=valid_len)
+            return x, st
+
+        x, layer_states = jax.lax.scan(layer_body, x,
+                                       (sp, state["layers"]))
+        new_state["layers"] = layer_states
+        if valid_len is None:
+            x_last = x[:, -1:]
+        else:
+            x_last = jnp.take_along_axis(
+                x, jnp.maximum(valid_len - 1, 0)[:, None, None], axis=1)
+        return _logits(params, cfg, x_last)[:, 0], new_state
 
     def unit_body(x, xs):
         unit_params, unit_state = xs
@@ -532,48 +656,90 @@ def prefill(params, cfg: ModelConfig, batch: dict, max_len: int
     return logits[:, None], state
 
 
-def decode_step(params, cfg: ModelConfig, token: Array, state: dict
+def decode_step(params, cfg: ModelConfig, token: Array, state: dict,
+                proj: Optional[dict] = None, fused: bool = True
                 ) -> tuple[Array, dict]:
-    """One serving step. token: (B,) int32 -> (logits (B, V), new state)."""
+    """One serving step. token: (B,) int32 -> (logits (B, V), new state).
+
+    With ``cfg.use_kernel`` and a PRF kind, decode runs the fused
+    megakernel; ``proj`` is the precomposed per-layer projection pytree
+    (:func:`build_decode_proj`) — pass the engine-built one to keep the
+    M·Wᵀ composition off the per-token path, or leave None to compose
+    inside the step (bit-identical output). ``fused=False`` forces the
+    legacy two-stage kernel path (the oracle the megakernel is tested
+    against). A ``state`` from ``init_serve_state(stacked=True)`` runs
+    one scanned layer body over the stacked layer axis.
+    """
     pos = state["pos"]
     x = params["embed"][token][:, None]
     if cfg.embed_scale:
         x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
     x = x.astype(cfg.param_dtype)
     new_state: dict[str, Any] = {"pos": pos + 1}
+    if proj is None and fused:
+        proj = build_decode_proj(params, cfg, stacked="layers" in state)
+    elif not fused:
+        proj = None
+
+    if "layers" in state:                  # layer-stacked homogeneous
+        kind0 = cfg.block_pattern[0]
+        sp = (params["layers"] if "layers" in params
+              else stack_layer_params(params, cfg))
+        proj_l = None if proj is None else proj["layers"]
+
+        def layer_body(x, xs):
+            layer_params, layer_state, layer_proj = xs
+            x, _, st = _apply_block(layer_params, x, cfg, kind0,
+                                    layer_key=None, state=layer_state,
+                                    mode="decode", position=pos,
+                                    proj=layer_proj)
+            return x, st
+
+        x, layer_states = jax.lax.scan(
+            layer_body, x, (sp, state["layers"], proj_l))
+        new_state["layers"] = layer_states
+        return _logits(params, cfg, x)[:, 0], new_state
+
+    proj_units = (proj or {}).get("units") or \
+        {f"b{i}": None for i in range(len(cfg.block_pattern))}
 
     def unit_body(x, xs):
-        unit_params, unit_state = xs
+        unit_params, unit_state, unit_proj = xs
         new_states = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, _, st = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
                                     layer_key=None,
                                     state=unit_state[f"b{i}"],
-                                    mode="decode", position=pos)
+                                    mode="decode", position=pos,
+                                    proj=unit_proj[f"b{i}"])
             new_states[f"b{i}"] = st
         return x, new_states
 
     if cfg.n_units > 0:
         if cfg.scan_layers:
             x, unit_states = jax.lax.scan(
-                unit_body, x, (params["units"], state["units"]))
+                unit_body, x, (params["units"], state["units"],
+                               proj_units))
             new_state["units"] = unit_states
         else:
             per_unit = []
             for u in range(cfg.n_units):
                 sl = jax.tree_util.tree_map(lambda a: a[u],
                                             (params["units"],
-                                             state["units"]))
+                                             state["units"],
+                                             proj_units))
                 x, st_u = unit_body(x, sl)
                 per_unit.append(st_u)
             new_state["units"] = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *per_unit)
     if cfg.n_rem:
+        rem_proj = (proj or {}).get("rem") or [None] * cfg.n_rem
         new_state["rem"] = []
         for i in range(cfg.n_rem):
             kind = cfg.block_pattern[i % len(cfg.block_pattern)]
             x, _, st = _apply_block(params["rem"][i], x, cfg, kind,
                                     layer_key=None, state=state["rem"][i],
-                                    mode="decode", position=pos)
+                                    mode="decode", position=pos,
+                                    proj=rem_proj[i])
             new_state["rem"].append(st)
     return _logits(params, cfg, x)[:, 0], new_state

@@ -254,7 +254,9 @@ def serve_state_specs(state: PyTree, mesh: Mesh) -> PyTree:
         shape = tuple(leaf.shape)
         if not shape:
             return P()
-        off = 1 if "['units']" in ps else 0   # scanned leading dim
+        # scanned leading layer dim ('units' per-unit stacks, 'layers'
+        # the layer-stacked homogeneous layout)
+        off = 1 if ("['units']" in ps or "['layers']" in ps) else 0
         axes: list = [None] * len(shape)
         if len(shape) > off and shape[off] % dp_size == 0:
             axes[off] = dp

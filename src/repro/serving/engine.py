@@ -17,18 +17,27 @@ device. This engine is that multiplexer:
     pool** holding every mid-prefill admission's partial state
     (repro/serving/slots.py);
   * a **token-budget packer**: each ``step()`` splits at most
-    ``chunk_tokens`` prompt tokens across ALL staged admissions (FIFO,
-    ceil-divided shares) and advances them together in ONE padded
-    (P, L) ``prefill_chunk`` call — ragged rows are masked per-row
-    (``valid_len``) and chunk lengths are bucketed to powers of two so
-    compiles stay bounded by (rows <= max_slots) x (log2 length
-    buckets). ``chunk_tokens=None`` is the blocking baseline: all
-    staged admissions prefill their whole prompts in one padded call;
+    ``chunk_tokens`` prompt tokens across ALL staged admissions and
+    advances them together in ONE padded (P, L) ``prefill_chunk`` call
+    — under bucketing the grants are COALESCED to one shared pow-2
+    size (prev_pow2(budget/P)) so non-tail rows pack with zero padding
+    waste (occupancy 1.0 under ragged bursts); ragged rows are masked
+    per-row (``valid_len``) and chunk lengths are bucketed to powers
+    of two so compiles stay bounded by (rows <= max_slots) x (log2
+    length buckets). ``chunk_tokens=None`` is the blocking baseline:
+    all staged admissions prefill their whole prompts in one padded
+    call;
   * one jitted **batched decode step** that advances all slots in
     lock-step; inactive slots are masked so their state stays bit-frozen
     (skipped entirely — a static fast path — when every slot is live).
     A mid-prefill slot's state lives in the staging pool until its last
-    chunk lands, so partial prefills never perturb pool rows.
+    chunk lands, so partial prefills never perturb pool rows. For
+    homogeneous configs both pools are LAYER-STACKED
+    (``lm.can_stack_layers``): the step scans one compiled layer body
+    over a leading (n_layers,) axis, and with ``cfg.use_kernel`` that
+    body runs the ``prf_fused_decode`` megakernel against per-layer
+    projections precomposed once at engine build
+    (``lm.build_decode_proj``).
 
 Pass ``mesh=`` to place BOTH pools under a device mesh: every pool leaf
 is sharded per ``repro.parallel.serve_state_specs`` (slots over the data
@@ -137,16 +146,37 @@ class ServingEngine:
         self.prefill_rows = prefill_rows
         self.bucket_prefill = bucket_prefill
         self.mesh = mesh
+        # homogeneous configs stack all L layer states along one leading
+        # axis so the jitted steps scan ONE compiled layer body
+        # (lm.can_stack_layers); heterogeneous patterns keep the
+        # per-unit layout
+        self._stacked = lm.can_stack_layers(cfg)
         self.pool = lm.init_serve_state(cfg, b=max_slots, max_len=max_len,
-                                        per_slot=True)
+                                        per_slot=True,
+                                        stacked=self._stacked)
         # fixed-size staging pool: row i holds the partial prefill state
         # of the admission reserved on slot i (same pytree as the pool)
         self.staging = lm.init_serve_state(cfg, b=max_slots,
-                                           max_len=max_len, per_slot=True)
+                                           max_len=max_len, per_slot=True,
+                                           stacked=self._stacked)
         # immutable one-row template scattered at admission; every
         # prefill chain starts from this fresh per-slot row
         self._fresh_row = lm.init_serve_state(cfg, b=1, max_len=max_len,
-                                              per_slot=True)
+                                              per_slot=True,
+                                              stacked=self._stacked)
+        # precomposed per-layer decode projections (A = (W M)^T): the
+        # M·Wᵀ composition happens HERE, once at engine build — the
+        # fused decode megakernel then does a single x @ A per token
+        self._decode_proj = lm.build_decode_proj(params, cfg,
+                                                 stacked=self._stacked)
+        # likewise the layer-stacked param tree: interleaved once here
+        # (a no-copy alias for the k=1 patterns) so the jitted steps
+        # never re-stack weights per token
+        self._step_params = params
+        if self._stacked:
+            self._step_params = dict(params)
+            self._step_params["layers"] = lm.stack_layer_params(params,
+                                                                cfg)
 
         pool_shardings = None
         if mesh is not None:
@@ -182,8 +212,9 @@ class ServingEngine:
                 return tree
             return jax.lax.with_sharding_constraint(tree, pool_shardings)
 
-        def _decode(params, pool, toks, active, all_active):
-            logits, new = lm.decode_step(params, cfg_, toks, pool)
+        def _decode(params, proj, pool, toks, active, all_active):
+            logits, new = lm.decode_step(params, cfg_, toks, pool,
+                                         proj=proj)
             new = slot_ops.freeze_inactive(pool, new, active,
                                            all_active=all_active)
             return logits, _constrain(new)
@@ -241,8 +272,8 @@ class ServingEngine:
             drawn = jax.random.categorical(key, masked, axis=-1)
             return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(1,),
-                                  static_argnums=(4,))
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
+                                  static_argnums=(5,))
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
         self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
@@ -384,10 +415,14 @@ class ServingEngine:
         across the staged admissions, FIFO. Returns [(slot, tokens)].
 
         Blocking mode (``chunk_tokens=None``) grants every staged
-        admission its full remaining prompt. Chunked mode ceil-divides
-        the remaining budget over the remaining admissions at each FIFO
-        position, so the oldest admission gets at least its fair share
-        and short tails free budget for the rows behind them — at most
+        admission its full remaining prompt. Chunked + bucketed mode
+        COALESCES: every staged row gets the same pow-2 grant
+        ``g = prev_pow2(chunk_tokens // rows)``, so all non-tail rows
+        land in one shared length bucket with ZERO padding waste —
+        ``prefill_batch_occupancy`` is 1.0 under ragged admission
+        bursts until the rows' last partial chunks. Unbucketed chunked
+        mode keeps the legacy FIFO ceil-shares (the serial bit-exact
+        contract at ``prefill_rows=1``). Either way at most
         ``chunk_tokens`` prompt tokens total run between two decode
         steps (the invariant the latency benchmark measures).
         """
@@ -401,6 +436,14 @@ class ServingEngine:
                 grants.append((i, len(slot.req.prompt) - slot.cursor))
             return grants
         budget = self.chunk_tokens
+        if self.bucket_prefill and staged and budget >= len(staged):
+            # coalesced equal-length grants: one bucket, no padding
+            g = 1 << ((budget // len(staged)).bit_length() - 1)
+            for i in staged:
+                slot = self._slots[i]
+                grants.append((i, min(len(slot.req.prompt) - slot.cursor,
+                                      g)))
+            return grants
         for j, i in enumerate(staged):
             if budget <= 0:
                 break
@@ -432,7 +475,7 @@ class ServingEngine:
         vl = None if (ts == l_pad).all() else jnp.asarray(ts)
         idx = jnp.asarray([i for i, _ in grants], jnp.int32)
         logits, self.staging = self._prefill_fn(
-            self.params, self.staging, jnp.asarray(toks), idx, vl)
+            self._step_params, self.staging, jnp.asarray(toks), idx, vl)
 
         spent = int(ts.sum())
         self._stats["prefill_tokens"] += spent
@@ -497,8 +540,9 @@ class ServingEngine:
         # static all-active flag: a fully occupied pool skips the
         # pool-wide freeze select (bit-identical either way)
         logits, self.pool = self._decode_fn(
-            self.params, self.pool, jnp.asarray(self._toks),
-            jnp.asarray(self._active), bool(self._active.all()))
+            self._step_params, self._decode_proj, self.pool,
+            jnp.asarray(self._toks), jnp.asarray(self._active),
+            bool(self._active.all()))
         key = jax.random.fold_in(self._key, self._step_count)
         # host-side check: only pay the full-vocab sort/cumsum masks when
         # some active row actually uses top-k/p (the masks are identity

@@ -14,8 +14,10 @@ The engine keeps TWO device-resident pools, both built by
 Slot i of a pool is batch row i of every leaf, but the slot axis is NOT
 uniform across the tree:
 
-  * ``state["units"]`` leaves are stacked over scanned layer units, so
-    they carry a leading (n_units,) axis and the slot axis is **1**;
+  * ``state["units"]`` leaves are stacked over scanned layer units, and
+    ``state["layers"]`` leaves (the layer-stacked layout of homogeneous
+    configs, ``lm.init_serve_state(stacked=True)``) over ALL layers —
+    both carry a leading layer axis and the slot axis is **1**;
   * ``state["rem"]`` (unscanned remainder layers) and ``state["pos"]``
     have the slot axis at **0**;
   * scalar per-sequence leaves produced by a B=1 prefill (``pos``, the
@@ -42,10 +44,11 @@ def tree_slot_map(fn, pool: dict, *others: dict) -> dict:
     states. ``others`` must share ``pool``'s tree structure (None leaves,
     e.g. the unused half of AttnServeState, are skipped by tree_map)."""
     out = {}
-    if "units" in pool:
-        out["units"] = jax.tree_util.tree_map(
-            lambda p, *o: fn(p, *o, axis=1), pool["units"],
-            *[t["units"] for t in others])
+    for lk in ("units", "layers"):         # leading layer axis -> slot @ 1
+        if lk in pool:
+            out[lk] = jax.tree_util.tree_map(
+                lambda p, *o: fn(p, *o, axis=1), pool[lk],
+                *[t[lk] for t in others])
     if "rem" in pool:
         out["rem"] = jax.tree_util.tree_map(
             lambda p, *o: fn(p, *o, axis=0), pool["rem"],

@@ -424,6 +424,36 @@ def test_engine_batches_staged_admissions_into_one_call(kind):
     assert [got[u] for u in uids] == [got_s[u] for u in uids_s], kind
 
 
+def test_packer_coalesces_ragged_burst_to_full_occupancy():
+    """ISSUE 4 satellite (ROADMAP open item): the packer grants every
+    staged row the SAME pow-2 chunk, so a ragged admission burst packs
+    into full buckets — prefill_batch_occupancy == 1.0 (zero padding
+    waste) as long as rows' remainders cover their grants, while the
+    per-step token budget stays <= chunk_tokens and streams still match
+    the serial schedule."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    lens = (32, 16, 8, 8)                 # ragged burst, pow-2 remnants
+    prompts = [_prompt(cfg.vocab, l, seed=140 + i)
+               for i, l in enumerate(lens)]
+    eng = ServingEngine(params, cfg, max_slots=4, max_len=64,
+                        chunk_tokens=16)
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=4))
+            for p in prompts]
+    got = {r.uid: r.tokens for r in eng.run()}
+    st = eng.stats
+    assert st["prefill_batch_occupancy"] == 1.0
+    assert st["max_prefill_tokens_per_step"] <= 16
+    assert st["prefill_rows_per_call"] > 1.0
+
+    serial = ServingEngine(params, cfg, max_slots=4, max_len=64,
+                           chunk_tokens=16, prefill_rows=1)
+    uids_s = [serial.submit(Request(prompt=p, max_new_tokens=4))
+              for p in prompts]
+    got_s = {r.uid: r.tokens for r in serial.run()}
+    assert [got[u] for u in uids] == [got_s[u] for u in uids_s]
+
+
 def test_engine_p1_unbucketed_matches_serial_bitwise():
     """prefill_rows=1 + bucket_prefill=False is the pre-batching
     scheduler: one unpadded chunk of the oldest admission per step —

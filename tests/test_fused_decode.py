@@ -1,0 +1,328 @@
+"""Fused data-aligned PRF decode megakernel (ISSUE 4 tentpole).
+
+Four layers of guarantee, all in interpret mode on CPU:
+
+  * kernel vs oracle: ``prf_fused_decode_fwd`` == ``ref.prf_fused_
+    decode_ref`` across kinds, GQA geometries, non-divisible slot
+    blocks and the stabilize=False path (incl. hypothesis sweeps);
+  * kernel vs the jnp decode path: the fused one-call decode equals
+    ``rf_attention_decode(use_kernel=False)`` (projection composed the
+    other way round) to f32 rounding, step by step over a whole decode
+    SEQUENCE — the stabilizer-trajectory contract — and matches the
+    resumed-prefill reference;
+  * aliasing: the pallas_call carries ``input_output_aliases`` mapping
+    the (c, s, z) pool inputs onto the state outputs, so a donated pool
+    is updated in place (no second pool-sized allocation);
+  * layer-stacked decode: ``init_serve_state(stacked=True)`` +
+    ``decode_step`` reproduce the per-unit layout exactly, and refuse
+    heterogeneous patterns.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro import configs as cfgs
+from repro.core import attention as rfa
+from repro.core import feature_maps as fm
+from repro.kernels import ops, ref
+from repro.kernels.prf_fused_decode import prf_fused_decode_fwd
+from repro.models import lm
+
+
+def _fused_inputs(b, g, hg, d, r, m, dv, dark, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 8)
+    q = jax.random.normal(ks[0], (b, g, hg, d))
+    k = jax.random.normal(ks[1], (b, g, d))
+    v = jax.random.normal(ks[2], (b, g, dv))
+    m_mat = 0.4 * jax.random.normal(ks[3], (g, r, d)) if dark else None
+    w = jax.random.normal(ks[4], (g, m, r if dark else d))
+    a = (jnp.einsum("gmr,grd->gdm", w, m_mat) if dark
+         else jnp.swapaxes(w, -1, -2))
+    s = jax.random.normal(ks[5], (b, g, hg, m, dv))
+    z = jax.random.uniform(ks[6], (b, g, hg, m)) + 0.5
+    c = jax.random.normal(ks[7], (b, g))
+    return q, k, v, a, m_mat, s, z, c
+
+
+@pytest.mark.parametrize("b,g,hg,d,r,m,dv,dark,stab,block_b", [
+    (1, 1, 1, 4, 2, 8, 4, True, True, 8),
+    (4, 2, 2, 8, 4, 16, 8, True, True, 2),     # GQA + blocked slots
+    (4, 1, 3, 8, 8, 16, 8, False, True, 8),    # isotropic performer
+    (3, 2, 2, 8, 4, 16, 8, True, True, 2),     # n % block_b != 0
+    (5, 2, 1, 4, 4, 8, 4, True, False, 3),     # stabilize off
+    (6, 3, 4, 8, 4, 16, 8, False, True, 4),    # wider GQA fan-out
+])
+def test_fused_kernel_vs_oracle(b, g, hg, d, r, m, dv, dark, stab,
+                                block_b):
+    args = _fused_inputs(b, g, hg, d, r, m, dv, dark, seed=b * 7 + m)
+    out = prf_fused_decode_fwd(*args, stabilize=stab, block_b=block_b,
+                               interpret=True)
+    exp = ref.prf_fused_decode_ref(*args, stabilize=stab)
+    for o, e, name in zip(out, exp, ("out", "s", "z", "c")):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                                   atol=1e-5, err_msg=name)
+
+
+@settings(deadline=None, max_examples=12)
+@given(st.integers(0, 10_000), st.integers(1, 5), st.integers(1, 3),
+       st.integers(1, 4), st.booleans())
+def test_fused_kernel_vs_oracle_hypothesis(seed, b, g, hg, dark):
+    d, r, m, dv = 8, 4, 16, 8
+    args = _fused_inputs(b, g, hg, d, r, m, dv, dark, seed=seed)
+    out = prf_fused_decode_fwd(*args, block_b=2, interpret=True)
+    exp = ref.prf_fused_decode_ref(*args)
+    for o, e, name in zip(out, exp, ("out", "s", "z", "c")):
+        np.testing.assert_allclose(np.asarray(o), np.asarray(e),
+                                   atol=1e-5, err_msg=name)
+
+
+# ---------------------------------------------------------------------------
+# fused path vs the jnp decode path (rf_attention_decode)
+# ---------------------------------------------------------------------------
+
+def _attn_setup(kind, b=3, g=2, hg=2, d=8, m=16, seed=0):
+    cfg = fm.FeatureConfig(kind=kind, num_features=m, feature_rank=0)
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    fparams = fm.init_feature_params(ks[0], cfg, d, n_groups=g)
+    if kind == "darkformer":
+        # a non-identity M so the data-aligned projection is exercised
+        fparams["m_mat"] = fparams["m_mat"] + 0.1 * jax.random.normal(
+            ks[1], fparams["m_mat"].shape)
+    state = rfa.init_linear_serve_state(b, g, hg, m, d)
+    proj = fm.precompose_projection(fparams, kind)
+    return cfg, fparams, state, proj
+
+
+@pytest.mark.parametrize("kind", ["darkformer", "performer", "lfk"])
+@pytest.mark.parametrize("stabilize", [True, False])
+def test_fused_decode_sequence_matches_jnp_path(kind, stabilize):
+    """Token-by-token decode through the megakernel tracks the jnp path
+    (atol 1e-5 f32) over a multi-step SEQUENCE: same online running-max
+    stabilizer trajectory, same state advance, even though the fused
+    path composes the projection as one x @ (W M)^T matmul."""
+    b, g, hg, d, m = 3, 2, 2, 8, 16
+    cfg, fparams, state, proj = _attn_setup(kind, b, g, hg, d, m)
+    cfg = dataclasses.replace(cfg, stabilize=stabilize)
+    state_f = state
+    key = jax.random.PRNGKey(7)
+    for t in range(6):
+        kq, kk, kv, key = jax.random.split(key, 4)
+        # large scale so new keys keep beating the running max and the
+        # in-kernel rho-rescale actually fires
+        q = 2.0 * jax.random.normal(kq, (b, g, hg, 1, d))
+        k = 2.0 * jax.random.normal(kk, (b, g, 1, 1, d))
+        v = jax.random.normal(kv, (b, g, 1, 1, d))
+        out_j, state = rfa.rf_attention_decode(q, k, v, state, fparams,
+                                               cfg)
+        out_f, state_f = rfa.rf_attention_decode(q, k, v, state_f,
+                                                 fparams, cfg,
+                                                 use_kernel=True,
+                                                 proj=proj)
+        np.testing.assert_allclose(np.asarray(out_f), np.asarray(out_j),
+                                   atol=1e-5, err_msg=(kind, t))
+        np.testing.assert_allclose(np.asarray(state_f.s),
+                                   np.asarray(state.s), atol=1e-5,
+                                   err_msg=(kind, t))
+        np.testing.assert_allclose(np.asarray(state_f.z),
+                                   np.asarray(state.z), atol=1e-5)
+        np.testing.assert_allclose(np.asarray(state_f.c),
+                                   np.asarray(state.c), atol=1e-5)
+
+
+def test_fused_decode_sequence_matches_resumed_prefill():
+    """Decoding T tokens one-by-one through the megakernel lands on the
+    same (S, z, c) state and last output as the resumed-prefill
+    reference over the same tokens (f32 tolerance — the whole-chunk
+    prefill uses one max where decode walks a running max)."""
+    b, g, hg, d, m, t = 2, 2, 2, 8, 16, 7
+    cfg, fparams, state_f, proj = _attn_setup("darkformer", b, g, hg, d,
+                                              m, seed=5)
+    key = jax.random.PRNGKey(11)
+    kq, kk, kv = jax.random.split(key, 3)
+    q = jax.random.normal(kq, (b, g, hg, t, d))
+    k = jax.random.normal(kk, (b, g, 1, t, d))
+    v = jax.random.normal(kv, (b, g, 1, t, d))
+
+    out_f = None
+    for i in range(t):
+        out_f, state_f = rfa.rf_attention_decode(
+            q[:, :, :, i:i + 1], k[:, :, :, i:i + 1], v[:, :, :, i:i + 1],
+            state_f, fparams, cfg, use_kernel=True, proj=proj)
+    out_p, state_p = rfa.rf_attention_prefill(q, k, v, fparams, cfg)
+    np.testing.assert_allclose(np.asarray(out_f[:, :, :, 0]),
+                               np.asarray(out_p[:, :, :, -1]), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(state_f.s),
+                               np.asarray(state_p.s), rtol=2e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(state_f.z),
+                               np.asarray(state_p.z), rtol=2e-4,
+                               atol=1e-5)
+
+
+def test_fused_decode_from_fresh_state_sentinel():
+    """The -1e30 fresh-state stabilizer sentinel passes through the
+    in-kernel exp(c_old - c_new) rescale cleanly (rho underflows to 0
+    against the all-zero state; out is finite)."""
+    b, g, hg, d, m = 2, 1, 2, 8, 16
+    cfg, fparams, state, proj = _attn_setup("darkformer", b, g, hg, d, m)
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(jax.random.fold_in(key, 0), (b, g, hg, 1, d))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (b, g, 1, 1, d))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (b, g, 1, 1, d))
+    out, new = rfa.rf_attention_decode(q, k, v, state, fparams, cfg,
+                                       use_kernel=True, proj=proj)
+    assert bool(jnp.all(jnp.isfinite(out)))
+    assert bool(jnp.all(jnp.isfinite(new.s)))
+    ref_out, ref_new = rfa.rf_attention_decode(q, k, v, state, fparams,
+                                               cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new.c), np.asarray(ref_new.c),
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# in-place aliasing
+# ---------------------------------------------------------------------------
+
+def test_fused_decode_aliases_pool_in_place():
+    """The lowered pallas_call maps the (c, s, z) pool INPUTS onto the
+    state OUTPUTS (input_output_aliases), so under jit with a donated
+    pool no second pool-sized buffer is allocated — the property the
+    megakernel exists for."""
+    args = _fused_inputs(4, 2, 2, 8, 4, 16, 8, dark=True)
+    q, k, v, a, m_mat, s, z, c = args
+
+    def run(q, k, v, s, z, c):
+        return ops.fused_prf_decode(q, k, v, a, m_mat, s, z, c)
+
+    jaxpr = jax.make_jaxpr(run)(q, k, v, s, z, c)
+    eqns = [e for e in jaxpr.jaxpr.eqns
+            if "pallas" in str(e.primitive)]
+    assert len(eqns) == 1, "decode must be ONE fused pallas_call"
+    aliases = dict(eqns[0].params["input_output_aliases"])
+    # inputs: q k v a m_mat c s z -> outputs: out s_new z_new c_new
+    assert aliases == {5: 3, 6: 1, 7: 2}
+    # and the wrapper must never pad the slot axis (a pad would copy
+    # the pool): the iso variant drops m_mat, shifting the map by one
+    jaxpr_iso = jax.make_jaxpr(
+        lambda q, k, v, s, z, c: ops.fused_prf_decode(
+            q, k, v, a, None, s, z, c))(q, k, v, s, z, c)
+    eqns_iso = [e for e in jaxpr_iso.jaxpr.eqns
+                if "pallas" in str(e.primitive)]
+    assert dict(eqns_iso[0].params["input_output_aliases"]) == \
+        {4: 3, 5: 1, 6: 2}
+
+
+def test_fused_decode_block_divisor_never_pads():
+    from repro.kernels.prf_fused_decode import _block_divisor
+    for b in range(1, 33):
+        for bb in (1, 2, 4, 8, 16):
+            tb = _block_divisor(b, bb)
+            assert b % tb == 0 and 1 <= tb <= max(1, min(bb, b))
+
+
+# ---------------------------------------------------------------------------
+# layer-stacked decode
+# ---------------------------------------------------------------------------
+
+def test_stacked_decode_matches_unit_layout_bitwise():
+    """For the k=1 homogeneous patterns the stacked layout is the same
+    leaves scanned the same way — logits must match BITWISE."""
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray([3, 7], jnp.int32)
+    st_u = lm.init_serve_state(cfg, b=2, max_len=32)
+    st_s = lm.init_serve_state(cfg, b=2, max_len=32, stacked=True)
+    for _ in range(3):
+        lg_u, st_u = lm.decode_step(params, cfg, toks, st_u)
+        lg_s, st_s = lm.decode_step(params, cfg, toks, st_s)
+        np.testing.assert_array_equal(np.asarray(lg_u), np.asarray(lg_s))
+        toks = jnp.argmax(lg_u, -1).astype(jnp.int32)
+
+
+def test_stacked_prefill_chunk_matches_unit_layout():
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.asarray([[5, 9, 2, 7, 1]], jnp.int32)
+    st_u = lm.init_serve_state(cfg, b=1, max_len=32, per_slot=True)
+    st_s = lm.init_serve_state(cfg, b=1, max_len=32, per_slot=True,
+                               stacked=True)
+    lg_u, _ = lm.prefill_chunk(params, cfg, {"tokens": toks}, st_u)
+    lg_s, _ = lm.prefill_chunk(params, cfg, {"tokens": toks}, st_s)
+    np.testing.assert_array_equal(np.asarray(lg_u), np.asarray(lg_s))
+
+
+def test_stacked_multiblock_homogeneous_pattern():
+    """A k>1 homogeneous pattern interleaves b0/b1 params into one
+    (n_layers,) stack; decode must match the unit layout to f32
+    rounding (XLA may fuse the collapsed scan differently)."""
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    cfg = dataclasses.replace(cfg, block_pattern=("attn", "attn"),
+                              n_layers=4)
+    assert lm.can_stack_layers(cfg) and cfg.n_units == 2
+    params = lm.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jnp.asarray([4], jnp.int32)
+    st_u = lm.init_serve_state(cfg, b=1, max_len=16)
+    st_s = lm.init_serve_state(cfg, b=1, max_len=16, stacked=True)
+    for _ in range(3):
+        lg_u, st_u = lm.decode_step(params, cfg, toks, st_u)
+        lg_s, st_s = lm.decode_step(params, cfg, toks, st_s)
+        np.testing.assert_allclose(np.asarray(lg_u), np.asarray(lg_s),
+                                   atol=1e-5)
+        toks = jnp.argmax(lg_u, -1).astype(jnp.int32)
+
+
+def test_stacked_refuses_heterogeneous_pattern():
+    cfg = cfgs.get_config("recurrentgemma-2b", reduced=True)
+    assert not lm.can_stack_layers(cfg)
+    with pytest.raises(ValueError, match="homogeneous"):
+        lm.init_serve_state(cfg, b=1, max_len=16, stacked=True)
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-7b", "recurrentgemma-2b"])
+def test_engine_streams_match_reference_for_recurrent_archs(arch):
+    """The engine's layout choice (stacked for rwkv's homogeneous
+    pattern, per-unit for recurrentgemma) reproduces the single-
+    sequence reference stream."""
+    cfg = cfgs.get_config(arch, reduced=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(2), (9,), 0,
+                                cfg.vocab).tolist()
+    lg, st = lm.prefill(params, cfg, {"tokens": jnp.asarray([prompt])},
+                        max_len=32)
+    ref_toks = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(4):
+        lg, st = lm.decode_step(params, cfg,
+                                jnp.asarray(ref_toks[-1:]), st)
+        ref_toks.append(int(jnp.argmax(lg[0])))
+
+    from repro.serving import Request, ServingEngine
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=32)
+    assert eng._stacked == (arch == "rwkv6-7b")
+    uid = eng.submit(Request(prompt=prompt, max_new_tokens=5))
+    got = {r.uid: r.tokens for r in eng.run()}
+    assert got[uid] == ref_toks
+
+
+def test_build_decode_proj_layouts():
+    """build_decode_proj mirrors the serve-state layout, precomposing
+    one (G, d, m) A per attention layer (None for non-PRF configs)."""
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    cfg_k = dataclasses.replace(cfg, use_kernel=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    assert lm.build_decode_proj(params, cfg) is None      # no kernel
+    proj = lm.build_decode_proj(params, cfg_k, stacked=True)
+    w = params["units"]["b0"]["attn"]["feat"]["w"]
+    n_layers, g, m, _ = w.shape
+    d = cfg.head_dim
+    assert proj["layers"]["a"].shape == (n_layers, g, d, m)
+    proj_u = lm.build_decode_proj(params, cfg_k, stacked=False)
+    assert proj_u["units"]["b0"]["a"].shape == (n_layers, g, d, m)
+    cfg_ex = dataclasses.replace(cfgs.darkify(cfg, "exact"),
+                                 use_kernel=True)
+    assert lm.build_decode_proj(params, cfg_ex) is None   # no PRF state
