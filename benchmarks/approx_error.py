@@ -52,6 +52,69 @@ def _exact_attention(q, k, v):
     return jnp.einsum("bqk,bkd->bqd", p, v)
 
 
+def _exact_attention_causal(q, k, v):
+    logits = jnp.einsum("bqd,bkd->bqk", q, k)
+    l = q.shape[1]
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    logits = jnp.where(mask[None], logits, jnp.finfo(jnp.float32).min)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def prefill_path_rows(q, k, v, key, ms=(32, 128), n_seeds=8):
+    """Approximation error of the CAUSAL serving prefill path, per
+    implementation: the same iso-PRF estimator routed through the jnp
+    resume path, the two-stage Pallas path (jnp featmap + carry-scan
+    kernel) and the fused ``prf_fused_prefill`` megakernel, all against
+    causal exact attention. The tracked claim is that the fused path
+    changes NOTHING about the estimator — its attention error matches
+    the legacy paths to f32 noise (``max_dev_fused_vs_two_stage``),
+    so the per-m error budget of §3-4 transfers to the new kernel.
+    """
+    from repro.core import attention as rfa
+    from repro.core import feature_maps as fm
+    import numpy as np
+    b, l, d = q.shape
+    # rf_attention_prefill absorbs a d^{-1/4} temperature per side;
+    # pre-scale so the estimator still targets exp(q.k) like the rest
+    # of this benchmark
+    qs = (q * d ** 0.25)[:, None, None]              # (B, 1, 1, L, d)
+    ks = (k * d ** 0.25)[:, None, None]
+    vs = v[:, None, None]
+    exact = _exact_attention_causal(q, k, v)
+    rows = []
+    for m in ms:
+        errs = {"jnp": [], "two_stage": [], "fused": []}
+        devs = []
+        for s in range(n_seeds):
+            w = jax.random.normal(jax.random.fold_in(key, 1000 * m + s),
+                                  (1, m, d))
+            fparams = {"w": w}
+            cfg = fm.FeatureConfig(kind="performer", num_features=m)
+            proj = fm.precompose_projection(fparams, cfg.kind)
+            outs = {}
+            for name, kw in (("jnp", {}),
+                             ("two_stage", {"use_kernel": True}),
+                             ("fused", {"use_kernel": True,
+                                        "proj": proj})):
+                st = rfa.init_linear_serve_state(b, 1, 1, m, d)
+                o, _ = rfa.rf_attention_prefill(qs, ks, vs, fparams, cfg,
+                                                state=st, **kw)
+                outs[name] = o[:, 0, 0]
+                errs[name].append(float(jnp.mean(jnp.abs(outs[name]
+                                                         - exact))))
+            devs.append(float(jnp.max(jnp.abs(outs["fused"]
+                                              - outs["two_stage"]))))
+        rows.append({
+            "m": m,
+            "attn_err_jnp": float(np.median(errs["jnp"])),
+            "attn_err_two_stage": float(np.median(errs["two_stage"])),
+            "attn_err_fused": float(np.median(errs["fused"])),
+            "max_dev_fused_vs_two_stage": float(np.max(devs)),
+        })
+    return rows
+
+
 def run(fast: bool = True) -> dict:
     key = jax.random.PRNGKey(3)
     B, L, d = 4, 64, 16
@@ -106,7 +169,19 @@ def run(fast: bool = True) -> dict:
                      "attn_err_iso": agg[3], "attn_err_star": agg[4],
                      "attn_err_lam": agg[5],
                      "kernel_ratio_star": agg[1] / max(agg[0], 1e-12)})
-    out = {"rows": rows, "us_per_call": 0.0,
+    # causal serving-path coverage: the fused prefill megakernel must
+    # carry the same approximation error as the legacy paths
+    prefill_rows = prefill_path_rows(q, k, v, jax.random.fold_in(key, 2),
+                                     n_seeds=8 if fast else 24)
+    for row in prefill_rows:
+        print(f"  prefill-path m={row['m']}: "
+              f"err jnp={row['attn_err_jnp']:.4f} "
+              f"two-stage={row['attn_err_two_stage']:.4f} "
+              f"fused={row['attn_err_fused']:.4f} "
+              f"(fused vs two-stage dev "
+              f"{row['max_dev_fused_vs_two_stage']:.2e})", flush=True)
+    out = {"rows": rows, "prefill_path_rows": prefill_rows,
+           "us_per_call": 0.0,
            "derived": rows[-1]["kernel_ratio_star"]}  # MSE ratio @ m=256
     save_result("approx_error", out)
     return out

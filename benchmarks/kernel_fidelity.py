@@ -86,6 +86,51 @@ def learn_m_experiment(cfg_e, p_exact, data, steps=160, m=12, lr=2e-3):
     return out
 
 
+def prefill_path_fidelity(cfg_e, p_exact, data, calib_batch, m=16,
+                          n_eval=2):
+    """Swap fidelity THROUGH THE SERVING PREFILL PATHS: last-position
+    logit KL(exact || approx) of the whitening-calibrated darkformer
+    swap, with the swap model's logits produced by ``lm.prefill`` via
+    the jnp resume path, the two-stage kernel path, and the fused
+    ``prf_fused_prefill`` megakernel. The fused path must carry the
+    SAME fidelity as the legacy ones (``max_dev_fused_vs_jnp`` is f32
+    noise) — approximation-error tracking covers the path the engine
+    actually serves, not just the training-time attention."""
+    import dataclasses
+    cfg = bench_cfg("darkformer", m=m)
+    params = transplant(p_exact, lm.init_params(jax.random.PRNGKey(2),
+                                                cfg))
+    params = lm.whitening_calibrate(params, cfg, calib_batch)
+    cfg_k = dataclasses.replace(cfg, use_kernel=True)
+    out = {"m": m}
+    kls = {}
+    devs = []
+    for i in range(n_eval):
+        batch = dict(data.batch(60_000 + i))
+        toks = batch["tokens"]
+        logits_e, _ = lm.prefill(p_exact, cfg_e, {"tokens": toks},
+                                 max_len=toks.shape[1] + 1)
+        pe = jax.nn.log_softmax(logits_e[:, -1], -1)
+        lgs = {}
+        for name, (c, kw) in (("jnp", (cfg, {})),
+                              ("two_stage", (cfg_k, {"fused": False})),
+                              ("fused", (cfg_k, {}))):
+            st = lm.init_serve_state(cfg, b=toks.shape[0],
+                                     max_len=toks.shape[1] + 1,
+                                     per_slot=True, stacked=True)
+            lg, _ = lm.prefill_chunk(params, c, {"tokens": toks}, st,
+                                     **kw)
+            lgs[name] = lg
+            pa = jax.nn.log_softmax(lg, -1)
+            kls.setdefault(name, []).append(
+                float(jnp.mean(jnp.sum(jnp.exp(pe) * (pe - pa), -1))))
+        devs.append(float(jnp.max(jnp.abs(lgs["fused"] - lgs["jnp"]))))
+    for name, vals in kls.items():
+        out[f"kl_{name}"] = sum(vals) / len(vals)
+    out["max_dev_fused_vs_jnp"] = max(devs)
+    return out
+
+
 def run(fast: bool = True, base=None) -> dict:
     cfg_e, p_exact, _ = base or pretrain_base(fast)
     data = SyntheticLM(cfg_e.vocab, SEQ, BATCH, seed=7, host=13)
@@ -109,6 +154,14 @@ def run(fast: bool = True, base=None) -> dict:
         print(f"  fidelity m={m}: KL dark={row['kl_darkformer']:.4f} "
               f"perf={row['kl_performer']:.4f} "
               f"ratio={row['kl_ratio']:.3f}", flush=True)
+    # --- serving-path coverage: the fused prefill megakernel must not
+    # change the swap fidelity ---
+    ppath = prefill_path_fidelity(cfg_e, p_exact, data, calib)
+    print(f"  prefill-path m={ppath['m']}: KL jnp={ppath['kl_jnp']:.4f} "
+          f"two-stage={ppath['kl_two_stage']:.4f} "
+          f"fused={ppath['kl_fused']:.4f} "
+          f"(fused vs jnp dev {ppath['max_dev_fused_vs_jnp']:.2e})",
+          flush=True)
     # --- the mechanism demo on an anisotropized model ---
     p_aniso = _anisotropize(p_exact, cfg_e)
     taps_a = lm.collect_qk(p_aniso, cfg_e, calib)
@@ -122,7 +175,7 @@ def run(fast: bool = True, base=None) -> dict:
     print(f"  learn-M (injected aniso {aniso_inj:.3f}): "
           f"dark loss={final_dark:.4f} perf loss={final_perf:.4f}",
           flush=True)
-    out = {"rows": rows, "anisotropy": aniso,
+    out = {"rows": rows, "prefill_path": ppath, "anisotropy": aniso,
            "anisotropy_injected": aniso_inj, "ce_exact": ce_exact,
            "learn_m_curves": curves,
            "learn_m_gap": final_perf - final_dark,

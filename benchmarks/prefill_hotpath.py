@@ -1,0 +1,264 @@
+"""Prefill hot-path bench: fused megakernel vs two-stage-kernel vs jnp.
+
+Measures the serving engine's OTHER steady-state unit of work — one
+packed (P, L) prefill chunk — across chunk sizes and ragged-row mixes,
+through three implementations of the resumed PRF prefill:
+
+  * ``jnp``        — pure-jnp feature map + carried-state chunked scan
+    (``rf_attention_prefill(use_kernel=False)``);
+  * ``two_stage``  — the pre-ISSUE-5 Pallas path: jnp
+    ``_resume_qk_features`` (featmap + running-max rescale + valid_len
+    masking in XLA) + the ``linear_attn_scan`` carry kernel, with the
+    (N, L, m) feature tensors round-tripping HBM between the stages;
+  * ``fused``      — the ``prf_fused_prefill`` megakernel: projection,
+    exp feature map, in-kernel running-max stabilizer carry, in-kernel
+    valid_len masking, causal scan and (S, z, c) advance in ONE
+    pallas_call per layer per chunk, state aliased in place.
+
+Two levels: raw attention-op chunk latency (isolates the kernel change)
+and full ``lm.prefill_chunk`` latency / prompt-tokens/s on the reduced
+bench model (includes the layer-stacked scan the engine runs). Snapshot
+written to ``experiments/bench/BENCH_prefill.json`` with the
+methodology recorded — on this CPU container the kernels run in
+interpret mode, so absolute numbers are simulation-level; the RELATIVE
+ordering (what the trajectory tracks) is the claim. Schema is validated
+on every write and by the CI bench-smoke job (``--validate``).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import attention as rfa
+from repro.core import feature_maps as fm
+from repro.models import lm
+from benchmarks.common import bench_cfg, load_result, save_result, \
+    time_call
+
+SCHEMA_VERSION = 1
+REQUIRED_ROW_KEYS = ("chunk", "rows", "ragged_frac", "us_jnp",
+                     "us_two_stage", "us_fused",
+                     "fused_speedup_vs_two_stage", "prompt_tok_s_fused")
+REQUIRED_LM_KEYS = ("chunk", "rows", "us_jnp", "us_two_stage", "us_fused",
+                    "prompt_tok_s_fused")
+
+
+def _ragged_lens(p: int, l: int, frac: float) -> jnp.ndarray | None:
+    """valid_len mix: ``frac`` of the rows cut to staggered partial
+    lengths (incl. one pure-padding row when there is room), the rest
+    full — the shape of a packer burst mid-drain."""
+    if frac <= 0:
+        return None
+    lens = [l] * p
+    n_ragged = max(1, int(p * frac))
+    cuts = [0, l // 4, l // 2, 3 * l // 4]
+    for j in range(n_ragged):
+        lens[p - 1 - j] = cuts[j % len(cuts)]
+    return jnp.asarray(lens, jnp.int32)
+
+
+def run_attention_level(chunk_sizes, *, p=8, g=1, hg=4, d=16, m=32,
+                        ragged_fracs=(0.0, 0.5), iters=16) -> list[dict]:
+    """Per-chunk latency of the resumed prefill attention op, three ways."""
+    cfg = fm.FeatureConfig(kind="darkformer", num_features=m)
+    fparams = fm.init_feature_params(jax.random.PRNGKey(0), cfg, d,
+                                     n_groups=g)
+    proj = fm.precompose_projection(fparams, cfg.kind)
+    rows = []
+    for l in chunk_sizes:
+        for frac in ragged_fracs:
+            state = rfa.init_linear_serve_state(p, g, hg, m, d)
+            key = jax.random.PRNGKey(l + int(frac * 10))
+            q = jax.random.normal(key, (p, g, hg, l, d))
+            k = jax.random.normal(jax.random.fold_in(key, 1),
+                                  (p, g, 1, l, d))
+            v = jax.random.normal(jax.random.fold_in(key, 2),
+                                  (p, g, 1, l, d))
+            vl = _ragged_lens(p, l, frac)
+
+            def mk(**kw):
+                return jax.jit(
+                    lambda q, k, v, s, vl: rfa.rf_attention_prefill(
+                        q, k, v, fparams, cfg, state=s, valid_len=vl,
+                        **kw))
+
+            fns = {"jnp": mk(),
+                   "two_stage": mk(use_kernel=True),
+                   "fused": mk(use_kernel=True, proj=proj)}
+            row = {"chunk": l, "rows": p, "ragged_frac": frac}
+            for name, fn in fns.items():
+                row[f"us_{name}"] = time_call(
+                    lambda fn=fn: fn(q, k, v, state, vl), iters=iters)
+            row["fused_speedup_vs_two_stage"] = (
+                row["us_two_stage"] / max(row["us_fused"], 1e-9))
+            toks = p * l if vl is None else int(vl.sum())
+            row["prompt_tok_s_fused"] = toks / (row["us_fused"] * 1e-6)
+            rows.append(row)
+            print(f"  attn chunk={l} ragged={frac}: "
+                  f"jnp={row['us_jnp']:.0f}us "
+                  f"two-stage={row['us_two_stage']:.0f}us "
+                  f"fused={row['us_fused']:.0f}us "
+                  f"({row['fused_speedup_vs_two_stage']:.2f}x, "
+                  f"{row['prompt_tok_s_fused']:.0f} prompt tok/s)",
+                  flush=True)
+    return rows
+
+
+def run_lm_level(chunk_sizes, *, p=4, iters=8) -> list[dict]:
+    """Full layer-stacked ``lm.prefill_chunk`` latency — what one packed
+    engine prefill step costs end to end (embed + L scanned blocks +
+    last-valid logit gather)."""
+    rows = []
+    cfg = bench_cfg("darkformer", m=32)
+    cfg_k = dataclasses.replace(cfg, use_kernel=True)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    proj = lm.build_decode_proj(params, cfg_k, stacked=True)
+    for l in chunk_sizes:
+        state = lm.init_serve_state(cfg, b=p, max_len=2 * l,
+                                    per_slot=True, stacked=True)
+        toks = jnp.zeros((p, l), jnp.int32)
+        vl = _ragged_lens(p, l, 0.5)
+        fns = {
+            "jnp": jax.jit(lambda pa, t, s, v: lm.prefill_chunk(
+                pa, cfg, {"tokens": t}, s, valid_len=v)),
+            "two_stage": jax.jit(lambda pa, t, s, v: lm.prefill_chunk(
+                pa, cfg_k, {"tokens": t}, s, valid_len=v, fused=False)),
+            "fused": jax.jit(lambda pa, t, s, v: lm.prefill_chunk(
+                pa, cfg_k, {"tokens": t}, s, valid_len=v, proj=proj)),
+        }
+        row = {"chunk": l, "rows": p}
+        for name, fn in fns.items():
+            row[f"us_{name}"] = time_call(
+                lambda fn=fn: fn(params, toks, state, vl)[0], iters=iters)
+        row["prompt_tok_s_fused"] = int(vl.sum()) / (row["us_fused"]
+                                                     * 1e-6)
+        rows.append(row)
+        print(f"  lm   chunk={l}: jnp={row['us_jnp']:.0f}us "
+              f"two-stage={row['us_two_stage']:.0f}us "
+              f"fused={row['us_fused']:.0f}us "
+              f"({row['prompt_tok_s_fused']:.0f} prompt tok/s)",
+              flush=True)
+    return rows
+
+
+def validate(payload: dict, require_win: bool = True) -> list[str]:
+    """Schema check keeping the perf trajectory machine-readable.
+    Returns a list of problems (empty == valid). ``require_win`` also
+    enforces the ISSUE-5 acceptance bar (fused >= two-stage throughput
+    at EVERY measured chunk size) — on for tracked snapshots, off for
+    noisy CI smoke machines where only the schema is the contract."""
+    errs = []
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version != {SCHEMA_VERSION}")
+    meth = payload.get("methodology", {})
+    for key in ("backend", "kernel_mode", "timing"):
+        if not isinstance(meth.get(key), str):
+            errs.append(f"methodology.{key} missing")
+    for section, req in (("attention", REQUIRED_ROW_KEYS),
+                         ("lm_prefill", REQUIRED_LM_KEYS)):
+        rows = payload.get(section)
+        if not isinstance(rows, list) or not rows:
+            errs.append(f"{section}: missing/empty rows")
+            continue
+        for row in rows:
+            for key in req:
+                if not isinstance(row.get(key), (int, float)):
+                    errs.append(f"{section}: row {row.get('chunk')} "
+                                f"lacks numeric {key!r}")
+    if require_win:
+        losses = [r for r in payload.get("attention", [])
+                  if isinstance(r.get("fused_speedup_vs_two_stage"),
+                                (int, float))
+                  and r["fused_speedup_vs_two_stage"] < 1.0]
+        if losses:
+            errs.append(
+                "fused must be >= two-stage throughput at every measured "
+                "chunk size (acceptance bar of ISSUE 5); losing rows: "
+                + ", ".join(f"chunk={r['chunk']} ragged="
+                            f"{r['ragged_frac']}" for r in losses))
+    return errs
+
+
+def run(fast: bool = True) -> dict:
+    chunk_sizes = (16, 64, 256) if fast else (16, 64, 256, 512)
+    lm_sizes = (16, 64) if fast else (16, 64, 256)
+    payload = {
+        "schema_version": SCHEMA_VERSION,
+        "methodology": {
+            "backend": jax.default_backend(),
+            "kernel_mode": ("interpret" if jax.default_backend() != "tpu"
+                            else "mosaic"),
+            "timing": "median wall time over warm jit calls "
+                      "(benchmarks.common.time_call); one packed (P, L) "
+                      "prefill chunk per call",
+            "geometry": "attention: P=8 G=1 Hg=4 d=16 m=32 darkformer, "
+                        "ragged mixes 0%/50% of rows cut; "
+                        "lm: benchmarks.common.bench_cfg "
+                        "(4L d64 m=32, layer-stacked, P=4, 50% ragged)",
+            "note": "CPU interpret-mode numbers — relative ordering is "
+                    "the tracked claim, absolute us are simulation-level",
+        },
+        "attention": run_attention_level(chunk_sizes,
+                                         iters=16 if fast else 30),
+        "lm_prefill": run_lm_level(lm_sizes, iters=6 if fast else 12),
+    }
+    errs = validate(payload)
+    if errs:
+        raise SystemExit("BENCH_prefill schema invalid: "
+                         + "; ".join(errs))
+    # benchmarks.run keys its cache (and CSV line) off the bench name
+    biggest = payload["attention"][-1]
+    payload["us_per_call"] = biggest["us_fused"]
+    payload["derived"] = biggest["fused_speedup_vs_two_stage"]
+    save_result("prefill_hotpath", payload)
+    path = save_result("BENCH_prefill", payload)
+    print(f"wrote {path}")
+    return payload
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny chunk sizes / few iters (CI bench-smoke)")
+    ap.add_argument("--full", action="store_true",
+                    help="add the 512-token chunk cell")
+    ap.add_argument("--validate", action="store_true",
+                    help="only validate the committed snapshot's schema")
+    args = ap.parse_args()
+    if args.validate:
+        payload = load_result("BENCH_prefill")
+        if payload is None:
+            raise SystemExit("no BENCH_prefill.json snapshot to validate")
+        errs = validate(payload)
+        if errs:
+            raise SystemExit("invalid snapshot: " + "; ".join(errs))
+        print("BENCH_prefill.json schema OK "
+              f"({len(payload['attention'])} attention rows, "
+              f"{len(payload['lm_prefill'])} lm rows)")
+        return
+    if args.smoke:
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "methodology": {
+                "backend": jax.default_backend(),
+                "kernel_mode": "interpret",
+                "timing": "smoke run (CI)",
+            },
+            "attention": run_attention_level((8, 16), p=4, iters=4,
+                                             ragged_fracs=(0.5,)),
+            "lm_prefill": run_lm_level((8,), p=2, iters=3),
+        }
+        errs = validate(payload, require_win=False)
+        if errs:
+            raise SystemExit("smoke schema invalid: " + "; ".join(errs))
+        print("bench smoke OK")
+        return
+    run(fast=not args.full)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -245,7 +245,8 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
                          max_len: Optional[int] = None,
                          use_kernel: bool = False,
                          state: Optional[AttnServeState] = None,
-                         valid_len: Optional[Array] = None):
+                         valid_len: Optional[Array] = None,
+                         proj: Optional[dict] = None):
     """Causal pass over a prompt (chunk) + advanced serving state.
 
     ``state=None`` is the legacy whole-prompt entry point: the serving
@@ -263,6 +264,16 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
     positions contribute nothing to the state (masked k-features / masked
     cache writes). Outputs at padded positions are garbage by contract —
     callers gather per-row at ``valid_len - 1``.
+
+    With ``use_kernel`` a resumed PRF chunk runs through Pallas — fully
+    fused when ``proj`` carries the precomposed projection
+    (``fm.precompose_projection``): ONE ``prf_fused_prefill`` megakernel
+    per layer per packed chunk does projection, feature map, in-kernel
+    running-max rescale, ragged ``valid_len`` masking, the causal
+    carried-state scan and the (S, z, c) advance, aliasing the state in
+    place. Without ``proj`` the two-stage path (jnp
+    ``_resume_qk_features`` + the ``linear_attn_scan`` carry kernel) is
+    kept as the oracle.
     """
     b, g, hg, l, _ = q.shape
     dv = v.shape[-1]
@@ -298,6 +309,16 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
         z = jnp.sum(kfb.astype(jnp.float32), axis=-2)
         return out, AttnServeState(s=s, z=z, c=kc)
 
+    # resume: fused megakernel when the precomposed projection is in
+    # hand — raw q/k go straight in, valid_len masked in-kernel, state
+    # aliased in place (docs/kernels.md §Fused prefill).
+    if use_kernel and proj is not None and cfg.kind in PRF_KINDS:
+        out, s, z, c = kops.fused_prf_prefill(
+            qs, ks[:, :, 0], v[:, :, 0], proj["a"], proj.get("m_mat"),
+            state.s, state.z, state.c[:, :, 0, 0, 0], valid_len,
+            stabilize=cfg.stabilize, eps=cfg.eps, chunk=chunk)
+        return (out.astype(v.dtype),
+                state._replace(s=s, z=z, c=c[:, :, None, None, None]))
     # resume: online rescale of the k stabilizer, then the carried-state
     # chunked scan.
     vmask = (None if valid_len is None else

@@ -1,0 +1,18 @@
+"""Version-compat shims shared by every Pallas kernel in this package.
+
+jax renamed ``pltpu.TPUCompilerParams`` -> ``pltpu.CompilerParams`` around
+0.5; resolving the class here (once) lets the kernels run on either side
+of the rename without each module carrying its own copy of the getattr
+dance.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) or \
+    pltpu.TPUCompilerParams
+
+
+def compiler_params(*, dimension_semantics: tuple) -> object:
+    """Build TPU compiler params under whichever class this jax exposes."""
+    return COMPILER_PARAMS_CLS(dimension_semantics=dimension_semantics)

@@ -28,12 +28,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-Array = jax.Array
+from repro.kernels._compat import compiler_params
 
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5;
-# support both so the kernels run on either side of the rename.
-_COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) or \
-    pltpu.TPUCompilerParams
+Array = jax.Array
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, s_ref, z_ref, *, eps: float,
@@ -107,7 +104,7 @@ def linear_attention_causal_fwd(qf: Array, kf: Array, v: Array, *,
             pltpu.VMEM((1, m), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=_COMPILER_PARAMS_CLS(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(qf, kf, v)
     return out[:, :l]
@@ -208,7 +205,7 @@ def linear_attention_causal_carry_fwd(qf: Array, kf: Array, v: Array,
             pltpu.VMEM((1, m), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=_COMPILER_PARAMS_CLS(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(qf, kf, v, s0, z0)
     return out[:, :l], s_f, z_f

@@ -151,6 +151,37 @@ def fused_prf_decode(q: Array, k: Array, v: Array, a: Array,
 
 
 # ---------------------------------------------------------------------------
+# Fused data-aligned prefill megakernel (serving)
+# ---------------------------------------------------------------------------
+
+from repro.kernels.prf_fused_prefill import prf_fused_prefill_fwd  # noqa: E402
+
+
+def fused_prf_prefill(q: Array, k: Array, v: Array, a: Array,
+                      m_mat: Array | None, s: Array, z: Array, c: Array,
+                      valid_len: Array | None = None, *,
+                      stabilize: bool = True, eps: float = 1e-6,
+                      chunk: int = 256, block_b: int = 1):
+    """One packed prefill chunk fully fused: raw scaled q/k in, chunk
+    outputs plus the advanced resumable (S, z, c) out, with the
+    projection/featmap/running-max stabilizer/causal scan/state advance
+    chain in one kernel per layer per chunk, ragged ``valid_len`` rows
+    masked in-kernel, and the state aliased in place.
+
+    q: (B, G, Hg, L, d); k, v: (B, G, L, d|dv); a: (G, d, m)
+    precomposed (W M)^T (see ``feature_maps.precompose_projection``);
+    m_mat: (G, r, d) or None; s: (B, G, Hg, m, dv); z: (B, G, Hg, m);
+    c: (B, G); valid_len: (B,) int32 or None. Forward-only (serving-
+    side prefill; no VJP). Returns (out (B, G, Hg, L, dv) in v.dtype,
+    s_new, z_new, c_new (B, G)), state in f32.
+    """
+    return prf_fused_prefill_fwd(
+        q, k, v, a, m_mat, s, z, c, valid_len,
+        stabilize=stabilize, eps=eps, chunk=chunk, block_b=block_b,
+        interpret=_use_interpret())
+
+
+# ---------------------------------------------------------------------------
 # Fused PRF feature map
 # ---------------------------------------------------------------------------
 

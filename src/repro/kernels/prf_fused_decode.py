@@ -42,13 +42,10 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import compiler_params
 
 Array = jax.Array
-
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5
-_COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) or \
-    pltpu.TPUCompilerParams
 
 
 def _featurize(x2, a, m_mat):
@@ -195,7 +192,7 @@ def prf_fused_decode_fwd(q: Array, k: Array, v: Array, a: Array,
         # c -> output 3, n_lead+1 is s -> output 1, n_lead+2 is z -> 2
         input_output_aliases={n_lead: 3, n_lead + 1: 1, n_lead + 2: 2},
         interpret=interpret,
-        compiler_params=_COMPILER_PARAMS_CLS(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel")),
     )(*inputs)
     return out, s_new, z_new, c_new

@@ -117,6 +117,72 @@ def wkv6_ref(r: Array, k: Array, v: Array, w: Array, u: Array,
     return jnp.moveaxis(outs, 0, 1), s_last
 
 
+def prf_fused_prefill_ref(q: Array, k: Array, v: Array, a: Array,
+                          m_mat: Array | None, s: Array, z: Array,
+                          c: Array, valid_len: Array | None = None, *,
+                          stabilize: bool = True, eps: float = 1e-6):
+    """Fused data-aligned PRF prefill-chunk oracle — projection, exp
+    feature map with the running-max k-stabilizer (ONE max over the
+    whole chunk, the jnp ``_resume_qk_features`` trajectory), ragged
+    ``valid_len`` masking, causal carried-state attention and the
+    resumable (S, z, c) advance, all from RAW scaled q/k.
+
+    q: (B, G, Hg, L, d); k, v: (B, G, L, d|dv); a: (G, d, m)
+    precomposed (W M)^T; m_mat: (G, r, d) or None (isotropic norm);
+    s: (B, G, Hg, m, dv); z: (B, G, Hg, m); c: (B, G); valid_len:
+    (B,) int32 or None (all rows full). Returns (out (B, G, Hg, L, dv)
+    f32, s_new, z_new, c_new), with outputs at masked positions
+    garbage by contract.
+    """
+    f32 = jnp.float32
+    q, k, v, a, s, z, c = (t.astype(f32)
+                           for t in (q, k, v, a, s, z, c))
+    b, g, hg, l, _ = q.shape
+    m = a.shape[-1]
+    dv = v.shape[-1]
+    inv_sqrt_m = m ** -0.5
+    neg = jnp.finfo(f32).min
+
+    def raw(x, eq):
+        logits = jnp.einsum(eq + ",gdm->" + eq.replace("d", "m"), x, a)
+        xt = x if m_mat is None else jnp.einsum(
+            eq + ",grd->" + eq.replace("d", "r"), x, m_mat.astype(f32))
+        return logits - 0.5 * jnp.sum(xt * xt, -1, keepdims=True)
+
+    qraw = raw(q, "bghld")                               # (B,G,Hg,L,m)
+    kraw = raw(k, "bgld")                                # (B,G,L,m)
+    if valid_len is None:
+        valid = jnp.ones((b, l), bool)
+    else:
+        valid = jnp.arange(l)[None] < valid_len[:, None]
+    kraw_m = jnp.where(valid[:, None, :, None], kraw, neg)
+    if stabilize:
+        c_new = jnp.maximum(c, jnp.max(kraw_m, axis=(-2, -1)))
+        rho = jnp.exp(c - c_new)
+        kf = jnp.exp(kraw - c_new[..., None, None]) * inv_sqrt_m
+        qraw_m = jnp.where(valid[:, None, None, :, None], qraw, neg)
+        qf = jnp.exp(qraw - jnp.max(qraw_m, axis=(-2, -1),
+                                    keepdims=True)) * inv_sqrt_m
+    else:
+        c_new = jnp.zeros_like(c)
+        rho = jnp.exp(c)
+        kf = jnp.exp(kraw) * inv_sqrt_m
+        qf = jnp.exp(qraw) * inv_sqrt_m
+    kf = jnp.where(valid[:, None, :, None], kf, 0.0)
+
+    kfb = jnp.broadcast_to(kf[:, :, None], (b, g, hg, l, m))
+    vb = jnp.broadcast_to(v[:, :, None], (b, g, hg, l, dv))
+    s0 = s * rho[:, :, None, None, None]
+    z0 = z * rho[:, :, None, None]
+    out, s_new, z_new = linear_attention_carry_ref(
+        qf.reshape(-1, l, m), kfb.reshape(-1, l, m),
+        vb.reshape(-1, l, dv), s0.reshape(-1, m, dv),
+        z0.reshape(-1, m), eps=eps)
+    return (out.reshape(b, g, hg, l, dv),
+            s_new.reshape(b, g, hg, m, dv),
+            z_new.reshape(b, g, hg, m), c_new)
+
+
 def prf_fused_decode_ref(q: Array, k: Array, v: Array, a: Array,
                          m_mat: Array | None, s: Array, z: Array,
                          c: Array, *, stabilize: bool = True,

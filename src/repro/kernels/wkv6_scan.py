@@ -24,12 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-Array = jax.Array
+from repro.kernels._compat import compiler_params
 
-# jax renamed TPUCompilerParams -> CompilerParams around 0.5;
-# support both so the kernels run on either side of the rename.
-_COMPILER_PARAMS_CLS = getattr(pltpu, 'CompilerParams', None) or \
-    pltpu.TPUCompilerParams
+Array = jax.Array
 
 
 def _kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_ref, *, t: int):
@@ -92,7 +89,7 @@ def wkv6_fwd(r: Array, k: Array, v: Array, w: Array, u: Array, *,
         out_shape=jax.ShapeDtypeStruct((n, lp, dh), v.dtype),
         scratch_shapes=[pltpu.VMEM((dh, dh), jnp.float32)],
         interpret=interpret,
-        compiler_params=_COMPILER_PARAMS_CLS(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "arbitrary")),
     )(r, k, v, w, u.reshape(1, dh))
     return out[:, :l]

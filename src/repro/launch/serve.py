@@ -153,6 +153,8 @@ def main():
               f"span={span:.2f}s tokens[:8]={res.tokens[:8]}")
 
     st = engine.stats
+    print(f"attention paths: prefill={st['prefill_path']} "
+          f"decode={st['decode_path']}")
     tpots = np.array([t for r in results for t in r.tpots])
     span = max(r.finish_time for r in results) - min(
         r.arrival_time for r in results)

@@ -85,14 +85,16 @@ def attn_apply(params: dict, x: Array, cfg: fm.FeatureConfig, *,
 def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
                  window=None, qk_norm=False, rope_theta=10000.0,
                  max_len=None, use_kernel=False, state=None,
-                 position=None, valid_len=None):
+                 position=None, valid_len=None, proj=None):
     """Prefill one prompt chunk. ``state=None`` + ``position=None`` is the
     legacy whole-prompt call; with an incoming serve ``state`` and a chunk
     start ``position`` (() int32, or (B,) per-slot starts) the pass
     resumes: RoPE rotates at absolute positions and the attention state
     advances from where the previous chunk left it. ``valid_len`` ((B,)
     int32) marks ragged rows in a padded multi-admission chunk — see
-    ``rfa.rf_attention_prefill``."""
+    ``rfa.rf_attention_prefill``. ``proj`` is the block's precomposed
+    projection (``fm.precompose_projection``) selecting the fused
+    prefill megakernel under ``use_kernel``."""
     l = x.shape[1]
     if position is None:
         positions = jnp.arange(l)
@@ -107,7 +109,7 @@ def attn_prefill(params, x, cfg, *, n_heads, n_kv, d_head,
     out, state = rfa.rf_attention_prefill(
         q, k, v, params.get("feat"), cfg, window=window,
         max_len=max_len, use_kernel=use_kernel, state=state,
-        valid_len=valid_len)
+        valid_len=valid_len, proj=proj)
     return _merge_heads(out, params), state
 
 

@@ -168,8 +168,10 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
     ``valid_len`` ((B,) int32, prefill mode only) marks ragged rows of a
     padded multi-admission chunk; every stateful mixer masks its carry so
     padded positions leave no trace (see the per-mixer docstrings).
-    ``proj`` (decode mode) is the block's precomposed decode projection
-    selecting the fused megakernel path under ``cfg.use_kernel``.
+    ``proj`` (prefill / decode modes) is the block's precomposed serve
+    projection selecting the fused megakernel path under
+    ``cfg.use_kernel`` (prefill: ``prf_fused_prefill``; decode:
+    ``prf_fused_decode``).
     """
     aux = jnp.zeros((), jnp.float32)
     h = ll.apply_norm(cfg.norm_kind, params["ln1"], x)
@@ -189,7 +191,7 @@ def _apply_block(params, x, cfg: ModelConfig, kind: str, *,
             mix, new_state = ab.attn_prefill(
                 params["attn"], h, cfg.attn, window=window,
                 state=state, position=position, valid_len=valid_len,
-                use_kernel=cfg.use_kernel, **common)
+                use_kernel=cfg.use_kernel, proj=proj, **common)
         else:  # decode
             mix, new_state = ab.attn_decode(
                 params["attn"], h, state, cfg.attn, position=position,
@@ -450,16 +452,16 @@ def stack_layer_params(params: dict, cfg: ModelConfig) -> dict:
 
 def build_decode_proj(params: dict, cfg: ModelConfig,
                       stacked: bool = False) -> Optional[dict]:
-    """Precompose every attention layer's decode projection A = (W M)^T
+    """Precompose every attention layer's serve projection A = (W M)^T
     (``fm.precompose_projection``) — ONCE, at engine build, so the fused
-    decode megakernel never re-derives it per token. Returns a pytree
-    mirroring the serve-state layout ({"layers": ...} when ``stacked``,
-    else {"units": {"b<i>": ...}, "rem": [...]} with None at non-PRF
-    blocks), or None when the config has no fused path.
+    decode AND prefill megakernels never re-derive it per step. Returns
+    a pytree mirroring the serve-state layout ({"layers": ...} when
+    ``stacked``, else {"units": {"b<i>": ...}, "rem": [...]} with None
+    at non-PRF blocks), or None when the config has no fused path.
 
-    ``decode_step`` builds this on the fly when not given one (inside
-    the caller's jit — same composition, bit-identical A), so engines
-    that precompute and engines that don't agree exactly.
+    ``decode_step`` / ``prefill_chunk`` build this on the fly when not
+    given one (inside the caller's jit — same composition, bit-identical
+    A), so engines that precompute and engines that don't agree exactly.
     """
     if not (cfg.use_kernel and cfg.attn.kind in fm.PRF_KINDS):
         return None
@@ -546,7 +548,9 @@ def init_serve_state(cfg: ModelConfig, b: int, max_len: int,
 
 
 def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict,
-                  valid_len: Optional[Array] = None) -> tuple[Array, dict]:
+                  valid_len: Optional[Array] = None,
+                  proj: Optional[dict] = None,
+                  fused: bool = True) -> tuple[Array, dict]:
     """Advance a serve state over one prompt chunk.
 
     ``state`` is a serve state from :func:`init_serve_state` (fresh) or a
@@ -568,27 +572,42 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict,
     should pass ``valid_len=None``: the masked path is mathematically the
     identity then, but XLA may fuse it differently (f32-close, not
     bitwise) — the engine does exactly this for its exactness contract.
+
+    With ``cfg.use_kernel`` and a PRF kind the chunk runs the fused
+    ``prf_fused_prefill`` megakernel — ONE pallas_call per layer per
+    packed chunk, valid_len masked in-kernel, (S, z, c) aliased in
+    place. ``proj`` is the precomposed per-layer projection pytree
+    (:func:`build_decode_proj`) — pass the engine-built one to keep the
+    M·Wᵀ composition off the per-chunk path, or leave None to compose
+    inside the call (bit-identical output). ``fused=False`` forces the
+    legacy two-stage path (jnp featmap + carry-scan kernel — the oracle
+    the megakernel is tested against).
     """
     x = _embed_inputs(params, cfg, batch)
     pos = state["pos"]
     adv = x.shape[1] if valid_len is None else valid_len
     new_state: dict[str, Any] = {"pos": pos + adv}
+    if proj is None and fused:
+        proj = build_decode_proj(params, cfg, stacked="layers" in state)
+    elif not fused:
+        proj = None
 
     if "layers" in state:                  # layer-stacked homogeneous
         kind0 = cfg.block_pattern[0]
         sp = (params["layers"] if "layers" in params
               else stack_layer_params(params, cfg))
+        proj_l = None if proj is None else proj["layers"]
 
         def layer_body(x, xs):
-            layer_params, layer_state = xs
+            layer_params, layer_state, layer_proj = xs
             x, _, st = _apply_block(layer_params, x, cfg, kind0,
                                     layer_key=None, state=layer_state,
                                     mode="prefill", position=pos,
-                                    valid_len=valid_len)
+                                    valid_len=valid_len, proj=layer_proj)
             return x, st
 
         x, layer_states = jax.lax.scan(layer_body, x,
-                                       (sp, state["layers"]))
+                                       (sp, state["layers"], proj_l))
         new_state["layers"] = layer_states
         if valid_len is None:
             x_last = x[:, -1:]
@@ -597,41 +616,49 @@ def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict,
                 x, jnp.maximum(valid_len - 1, 0)[:, None, None], axis=1)
         return _logits(params, cfg, x_last)[:, 0], new_state
 
+    proj_units = (proj or {}).get("units") or \
+        {f"b{i}": None for i in range(len(cfg.block_pattern))}
+
     def unit_body(x, xs):
-        unit_params, unit_state = xs
+        unit_params, unit_state, unit_proj = xs
         new_states = {}
         for i, kind in enumerate(cfg.block_pattern):
             x, _, st = _apply_block(unit_params[f"b{i}"], x, cfg, kind,
                                     layer_key=None,
                                     state=unit_state[f"b{i}"],
                                     mode="prefill", position=pos,
-                                    valid_len=valid_len)
+                                    valid_len=valid_len,
+                                    proj=unit_proj[f"b{i}"])
             new_states[f"b{i}"] = st
         return x, new_states
 
     if cfg.n_units > 0:
         if cfg.scan_layers:
             x, unit_states = jax.lax.scan(
-                unit_body, x, (params["units"], state["units"]))
+                unit_body, x, (params["units"], state["units"],
+                               proj_units))
             new_state["units"] = unit_states
         else:
             per_unit = []
             for u in range(cfg.n_units):
                 sl = jax.tree_util.tree_map(lambda a: a[u],
                                             (params["units"],
-                                             state["units"]))
+                                             state["units"],
+                                             proj_units))
                 x, st_u = unit_body(x, sl)
                 per_unit.append(st_u)
             new_state["units"] = jax.tree_util.tree_map(
                 lambda *xs: jnp.stack(xs), *per_unit)
     if cfg.n_rem:
+        rem_proj = (proj or {}).get("rem") or [None] * cfg.n_rem
         new_state["rem"] = []
         for i in range(cfg.n_rem):
             kind = cfg.block_pattern[i % len(cfg.block_pattern)]
             x, _, st = _apply_block(params["rem"][i], x, cfg, kind,
                                     layer_key=None, state=state["rem"][i],
                                     mode="prefill", position=pos,
-                                    valid_len=valid_len)
+                                    valid_len=valid_len,
+                                    proj=rem_proj[i])
             new_state["rem"].append(st)
     if valid_len is None:
         x_last = x[:, -1:]

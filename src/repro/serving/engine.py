@@ -24,9 +24,12 @@ device. This engine is that multiplexer:
     waste (occupancy 1.0 under ragged bursts); ragged rows are masked
     per-row (``valid_len``) and chunk lengths are bucketed to powers
     of two so compiles stay bounded by (rows <= max_slots) x (log2
-    length buckets). ``chunk_tokens=None`` is the blocking baseline:
-    all staged admissions prefill their whole prompts in one padded
-    call;
+    length buckets). With ``cfg.use_kernel`` the packed call runs the
+    ``prf_fused_prefill`` megakernel against the same engine-built
+    projections as decode (one pallas_call per layer per chunk,
+    valid_len masked in-kernel, staging rows aliased in place).
+    ``chunk_tokens=None`` is the blocking baseline: all staged
+    admissions prefill their whole prompts in one padded call;
   * one jitted **batched decode step** that advances all slots in
     lock-step; inactive slots are masked so their state stays bit-frozen
     (skipped entirely — a static fast path — when every slot is live).
@@ -164,11 +167,17 @@ class ServingEngine:
         self._fresh_row = lm.init_serve_state(cfg, b=1, max_len=max_len,
                                               per_slot=True,
                                               stacked=self._stacked)
-        # precomposed per-layer decode projections (A = (W M)^T): the
+        # precomposed per-layer serve projections (A = (W M)^T): the
         # M·Wᵀ composition happens HERE, once at engine build — the
-        # fused decode megakernel then does a single x @ A per token
+        # fused decode megakernel then does a single x @ A per token,
+        # and the SAME pytree feeds the packed-prefill step so batched
+        # ragged admission runs the fused prefill megakernel too
         self._decode_proj = lm.build_decode_proj(params, cfg,
                                                  stacked=self._stacked)
+        # which implementation the jitted steps compiled — surfaced in
+        # ``stats`` so bench runs can assert they measured the path
+        # they claim (fused_kernel / jnp / exact / none)
+        self._serve_paths = self._resolve_serve_paths()
         # likewise the layer-stacked param tree: interleaved once here
         # (a no-copy alias for the k=1 patterns) so the jitted steps
         # never re-stack weights per token
@@ -219,13 +228,16 @@ class ServingEngine:
                                            all_active=all_active)
             return logits, _constrain(new)
 
-        def _prefill(params, staging, toks, idx, valid_len):
+        def _prefill(params, proj, staging, toks, idx, valid_len):
             # gather the P staged rows, advance them over one padded
             # (P, L) chunk, scatter them back — ONE device program per
-            # step regardless of how many admissions are in flight
+            # step regardless of how many admissions are in flight;
+            # with the precomposed proj the chunk runs the fused
+            # prf_fused_prefill megakernel (one pallas_call per layer)
             sub = slot_ops.read_slots(staging, idx)
             logits, new = lm.prefill_chunk(params, cfg_, {"tokens": toks},
-                                           sub, valid_len=valid_len)
+                                           sub, valid_len=valid_len,
+                                           proj=proj)
             return logits, _constrain(slot_ops.write_slots(staging, new,
                                                            idx))
 
@@ -274,11 +286,35 @@ class ServingEngine:
 
         self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
                                   static_argnums=(5,))
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(1,))
+        self._prefill_fn = jax.jit(_prefill, donate_argnums=(2,))
         self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
         self._sample_fn = jax.jit(_sample)
         self._sample_plain_fn = jax.jit(_sample_plain)
+
+    # -- introspection ----------------------------------------------------
+
+    def _resolve_serve_paths(self) -> dict:
+        """Name the attention implementation each jitted step compiled:
+        ``fused_kernel`` (the prf_fused_prefill / prf_fused_decode
+        megakernels against the engine-precomposed projections — what
+        ``cfg.use_kernel`` always selects here, since the engine builds
+        the projections at construction; the two-stage kernel path is
+        reachable only through the lm-level ``fused=False`` oracle
+        entry points, never through the engine), ``jnp`` (pure-XLA
+        reference), ``exact`` (softmax over per-slot KV pages — no
+        Pallas path), or ``none`` (no attention blocks, e.g. pure-RWKV
+        stacks)."""
+        cfg = self.cfg
+        if not any(k in ("attn", "local") for k in cfg.layer_kinds()):
+            path = "none"
+        elif cfg.attn.kind == "exact":
+            path = "exact"
+        elif self._decode_proj is not None:
+            path = "fused_kernel"
+        else:
+            path = "jnp"
+        return {"prefill_path": path, "decode_path": path}
 
     # -- clock ------------------------------------------------------------
 
@@ -475,7 +511,8 @@ class ServingEngine:
         vl = None if (ts == l_pad).all() else jnp.asarray(ts)
         idx = jnp.asarray([i for i, _ in grants], jnp.int32)
         logits, self.staging = self._prefill_fn(
-            self._step_params, self.staging, jnp.asarray(toks), idx, vl)
+            self._step_params, self._decode_proj, self.staging,
+            jnp.asarray(toks), idx, vl)
 
         spent = int(ts.sum())
         self._stats["prefill_tokens"] += spent
@@ -610,6 +647,7 @@ class ServingEngine:
     @property
     def stats(self) -> dict:
         s = dict(self._stats)
+        s.update(self._serve_paths)
         steps = max(s["decode_steps"], 1)
         # fraction of slot-steps that carried a live sequence
         s["mean_occupancy"] = (s["decode_slot_steps"]
