@@ -71,6 +71,13 @@ def main():
     ap.add_argument("--no-bucket-prefill", action="store_true",
                     help="disable pow-2 bucketing of packed prefill chunk "
                          "lengths (more recompiles, zero padding waste)")
+    ap.add_argument("--overlap", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="pipelined step loop: concurrent prefill/decode "
+                         "dispatch, double-buffered chunk packing, "
+                         "one-step-delayed non-blocking token readback "
+                         "(--no-overlap = sequential reference scheduler; "
+                         "token streams are identical either way)")
     ap.add_argument("--use-kernel", action="store_true",
                     help="route prefill/decode through the Pallas kernels "
                          "(decode = the fused prf_fused_decode megakernel "
@@ -127,7 +134,8 @@ def main():
                            chunk_tokens=args.chunk_tokens,
                            seed=args.seed, mesh=pool_mesh,
                            prefill_rows=args.prefill_rows,
-                           bucket_prefill=not args.no_bucket_prefill)
+                           bucket_prefill=not args.no_bucket_prefill,
+                           overlap=args.overlap)
     reqs = synthetic_requests(
         args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
         prompt_range=_parse_range(args.prompt_len),
@@ -154,7 +162,15 @@ def main():
 
     st = engine.stats
     print(f"attention paths: prefill={st['prefill_path']} "
-          f"decode={st['decode_path']}")
+          f"decode={st['decode_path']} "
+          f"scheduler={'overlap' if st['overlap'] else 'sequential'}")
+    if "decode_stall_ms_p50" in st:
+        print(f"decode stall (host blocked on token readiness): "
+              f"p50={st['decode_stall_ms_p50']:.2f}ms "
+              f"p99={st['decode_stall_ms_p99']:.2f}ms "
+              f"max={st['decode_stall_ms_max']:.2f}ms; "
+              f"dispatch depth mean={st['dispatch_depth_mean']:.1f} "
+              f"max={st['dispatch_depth_max']}")
     tpots = np.array([t for r in results for t in r.tpots])
     span = max(r.finish_time for r in results) - min(
         r.arrival_time for r in results)

@@ -42,13 +42,58 @@ device. This engine is that multiplexer:
     projections precomposed once at engine build
     (``lm.build_decode_proj``).
 
+Two step schedulers share those pieces:
+
+**Sequential** (``overlap=False``): one packed prefill chunk, then one
+batched decode, back-to-back with a blocking token readback — the
+reference scheduler every numerical-contract test pins down.
+
+**Overlapped** (``overlap=True``, the serve-CLI default): the step loop
+is restructured around JAX async dispatch so decode never waits on
+prefill and the host never idles on readback:
+
+  1. *retire* — block on the ONE-STEP-DELAYED sample buffer from the
+     previous step's decode (``jax.device_get`` on tokens that have had
+     a whole prefill chunk's worth of device time to finish), append
+     the now-ready tokens, fire ``Request.on_token`` hooks, evict
+     finished rows. This is the step's only synchronization point; the
+     blocked time is recorded per step as ``decode_stall_ms``;
+  2. *admit* — reserve slots + batched staging-row reset, as before;
+  3. *merge* — admissions whose final prefill chunk landed during the
+     PREVIOUS step are committed into the slot pool now (one deferred
+     ``merge_slots`` scatter), their first tokens sampled from the
+     saved final-chunk logits and scattered into the device-resident
+     token feed — so the merge rides ahead of this step's decode
+     instead of serializing after a prefill;
+  4. *decode dispatch* — the batched decode + sample step is enqueued
+     immediately, reading last step's sampled tokens straight from the
+     device feed buffer (no host round-trip on the token feedback
+     path); its sampled tokens become the NEXT step's retire target;
+  5. *prefill dispatch* — the chunk PACKED during the previous step is
+     enqueued behind the decode (rows whose request was cancelled since
+     packing are dropped); admissions finishing their prompt this chunk
+     queue a pending merge for step +1;
+  6. *pack* — the NEXT chunk's token block is packed on the host into a
+     double-buffered staging array (``slots.PackBuffer``) while this
+     step's chunk is still in flight.
+
+The pipeline trades one step of latency on each edge (admission to
+first chunk, prefill completion to decode participation, sample to host
+visibility) for a decode dispatch that never blocks on prefill or
+readback: all host-side packing, bookkeeping and sampling-parameter
+work overlaps device execution, and the decode stall observed at retire
+collapses to whatever dispatch could not hide. ``flush()`` drains the
+in-flight tail (stream end / step-driven callers); cancellation drops a
+request's in-flight tokens without a callback.
+
 Pass ``mesh=`` to place BOTH pools under a device mesh: every pool leaf
 is sharded per ``repro.parallel.serve_state_specs`` (slots over the data
 axes, head groups of the KV-cache / linear state over 'model'),
 ``device_put`` at construction, donated through every step, and pinned
 with ``with_sharding_constraint`` inside the jitted step functions so
 XLA never silently migrates the pool. Decode under a mesh is
-token-identical to the unsharded engine (tests/test_distributed.py).
+token-identical to the unsharded engine (tests/test_distributed.py,
+tests/test_overlapped_serving.py).
 
 Numerical contract: slot rows are computed elementwise over the batch
 axis, so a sequence decoded inside a busy heterogeneous batch produces
@@ -62,11 +107,27 @@ f32 rounding — and bit-exactly when ``chunk_tokens >= prompt_len``
 padded call masks every padded position out of the advanced states, so
 batched prefill matches the serial (``prefill_rows=1``) schedule to f32
 rounding; with one staged row and ``bucket_prefill=False`` the packed
-call IS the legacy unpadded chunk, bit-for-bit.
+call IS the legacy unpadded chunk, bit-for-bit. The overlapped loop
+runs the SAME jitted step functions in a different dispatch order, so
+overlap-vs-sequential token streams are identical per request
+(tests/test_overlapped_serving.py asserts bitwise stream equality under
+Poisson admission storms, including mid-stream cancel and eviction).
 
-Sampling: per-request ``temperature`` / ``top_k`` / ``top_p`` are applied
-inside one jitted batched sample step; the defaults (0 / 0 / 1.0) leave
-the greedy path bit-identical to plain argmax.
+Sampling: per-request ``temperature`` / ``top_k`` / ``top_p`` are
+applied inside one jitted batched sample step; the defaults (0 / 0 /
+1.0) leave the greedy path bit-identical to plain argmax. Every row
+draws with its own key ``fold_in(fold_in(base, uid), token_index)`` —
+a schedule-invariant derivation (independent of step count, batch
+composition, and chunk boundaries), which is what lets sampled streams
+match bitwise across the sequential and overlapped schedulers.
+
+Timing contract: every recorded token time is a *readiness* time — the
+engine blocks on the device value before reading the clock, never
+timing a dispatch return (under async dispatch a ``perf_counter`` delta
+around an unblocked call measures enqueue latency and silently
+under-reports TPOT). ``stats`` surfaces the per-step blocked time
+(``decode_stall_ms_*``) and how many dispatches the device queue ran
+ahead of the fetched buffer (``dispatch_depth_*``).
 """
 from __future__ import annotations
 
@@ -95,16 +156,20 @@ class _Slot:
     A slot is *prefilling* while ``cursor < len(req.prompt)`` — its
     attention state lives in staging-pool row i and it takes no part in
     decode. Once the last chunk lands the staged row is committed into
-    the pool and the slot decodes.
+    the pool and the slot decodes. ``emitted`` counts tokens *enqueued*
+    for the row (under the overlapped loop this runs one step ahead of
+    ``result.tokens``, which only holds host-retired tokens); it is the
+    per-row token index folded into the sampling key.
     """
 
-    __slots__ = ("req", "result", "budget", "cursor")
+    __slots__ = ("req", "result", "budget", "cursor", "emitted")
 
     def __init__(self, req: Request, result: RequestResult, budget: int):
         self.req = req
         self.result = result
         self.budget = budget
         self.cursor = 0
+        self.emitted = 0
 
 
 class ServingEngine:
@@ -113,13 +178,18 @@ class ServingEngine:
     Typical use::
 
         eng = ServingEngine(params, cfg, max_slots=8, max_len=512,
-                            chunk_tokens=64)
+                            chunk_tokens=64, overlap=True)
         eng.submit(Request(prompt=[...], max_new_tokens=64))
         results = eng.run()
 
-    or drive it step-by-step (one batched prefill chunk + one batched
-    decode per ``step()``) and ``submit`` more requests while others are
-    mid-decode.
+    or drive it step-by-step and ``submit`` more requests while others
+    are mid-decode. ``overlap=True`` selects the pipelined step loop
+    (concurrent prefill/decode dispatch, double-buffered chunk packing,
+    one-step-delayed non-blocking token readback — module docstring);
+    the default ``overlap=False`` is the sequential reference scheduler
+    (one packed prefill chunk then one blocking batched decode per
+    ``step()``). Token streams are identical between the two; the
+    serve CLI defaults to overlap.
 
     ``prefill_rows`` caps how many staged admissions share the packed
     prefill call (None = all staged, i.e. up to ``max_slots``; 1 =
@@ -134,7 +204,8 @@ class ServingEngine:
                  max_len: int = 256, chunk_tokens: Optional[int] = None,
                  seed: int = 0, mesh=None,
                  prefill_rows: Optional[int] = None,
-                 bucket_prefill: bool = True):
+                 bucket_prefill: bool = True,
+                 overlap: bool = False):
         if cfg.modality != "text":
             raise ValueError("serving engine drives text decode only")
         if chunk_tokens is not None and chunk_tokens < 1:
@@ -148,6 +219,7 @@ class ServingEngine:
         self.chunk_tokens = chunk_tokens
         self.prefill_rows = prefill_rows
         self.bucket_prefill = bucket_prefill
+        self.overlap = overlap
         self.mesh = mesh
         # homogeneous configs stack all L layer states along one leading
         # axis so the jitted steps scan ONE compiled layer body
@@ -201,12 +273,24 @@ class ServingEngine:
         self._top_ks = np.zeros(max_slots, np.int32)
         self._top_ps = np.ones(max_slots, np.float32)
         self._toks = np.zeros(max_slots, np.int32)
+        self._uids = np.zeros(max_slots, np.int32)
         self._prefill_order: list[int] = []    # slot idx, admission FIFO
         self._queue: list[Request] = []        # sorted by arrival_time
         self._key = jax.random.PRNGKey(seed)
-        self._step_count = 0
         self._t0: Optional[float] = None
         self._ttfts: list[float] = []
+        # -- overlap pipeline state (all None/empty when overlap=False) -
+        # device-resident token feed: decode reads last step's sampled
+        # tokens from here without a host round-trip
+        self._feed = jnp.zeros((max_slots,), jnp.int32)
+        # double-buffered host staging for packed chunk tokens
+        self._pack = slot_ops.PackBuffer(max_slots, _next_pow2(max_len))
+        self._next_chunk: Optional[dict] = None     # packed, undispatched
+        self._pending_merge: Optional[dict] = None  # landed, unmerged
+        self._inflight: Optional[dict] = None       # sampled, unfetched
+        self._dispatch_seq = 0          # jitted dispatches issued so far
+        self._stall_ms: list[float] = []        # per-retire blocked time
+        self._depths: list[int] = []            # per-retire queue depth
         self._stats = {"decode_steps": 0, "decode_slot_steps": 0,
                        "prefill_tokens": 0, "prefill_chunks": 0,
                        "prefill_calls": 0, "prefill_padded_tokens": 0,
@@ -242,9 +326,10 @@ class ServingEngine:
                                                            idx))
 
         def _commit(pool, staging, idx):
-            # finished admissions: copy staged rows into the slot pool
-            rows = slot_ops.read_slots(staging, idx)
-            return _constrain(slot_ops.write_slots(pool, rows, idx))
+            # finished admissions: one fused gather+scatter promotes the
+            # staged rows into the slot pool (the deferred merge of the
+            # overlapped loop rides this same scatter)
+            return _constrain(slot_ops.merge_slots(pool, staging, idx))
 
         def _reset(staging, fresh, idx):
             # one scatter resets every slot admitted this step: the
@@ -254,15 +339,28 @@ class ServingEngine:
                 lambda p, axis: jnp.repeat(p, k, axis=axis), fresh)
             return _constrain(slot_ops.write_slots(staging, fresh_k, idx))
 
-        def _sample_plain(key, logits, temps):
+        def _scatter_toks(feed, idx, vals):
+            # merge first tokens into the device token feed
+            return feed.at[idx].set(vals)
+
+        def _row_keys(uids, counts):
+            # schedule-invariant per-row sampling keys: (uid, token
+            # index) — independent of step count and batch composition,
+            # so a row's draws are identical under every scheduler
+            base = self._key
+            return jax.vmap(lambda u, n: jax.random.fold_in(
+                jax.random.fold_in(base, u), n))(uids, counts)
+
+        def _sample_plain(logits, uids, counts, temps):
             # greedy / plain-temperature rows only: skips the two
             # full-vocab sorts of the top-k/p masks on the hot loop
             greedy = jnp.argmax(logits, axis=-1)
             scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
-            drawn = jax.random.categorical(key, scaled, axis=-1)
+            keys = _row_keys(uids, counts)
+            drawn = jax.vmap(jax.random.categorical)(keys, scaled)
             return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
 
-        def _sample(key, logits, temps, top_ks, top_ps):
+        def _sample(logits, uids, counts, temps, top_ks, top_ps):
             v = logits.shape[-1]
             greedy = jnp.argmax(logits, axis=-1)
             scaled = logits / jnp.maximum(temps, 1e-6)[:, None]
@@ -281,16 +379,28 @@ class ServingEngine:
             cutoff = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1,
                              keepdims=True)
             masked = jnp.where(probs >= cutoff, masked, -jnp.inf)
-            drawn = jax.random.categorical(key, masked, axis=-1)
+            keys = _row_keys(uids, counts)
+            drawn = jax.vmap(jax.random.categorical)(keys, masked)
             return jnp.where(temps > 0, drawn, greedy).astype(jnp.int32)
+
+        def _first_plain(logits, ridx, uids, counts, temps):
+            return _sample_plain(jnp.take(logits, ridx, axis=0),
+                                 uids, counts, temps)
+
+        def _first(logits, ridx, uids, counts, temps, top_ks, top_ps):
+            return _sample(jnp.take(logits, ridx, axis=0),
+                           uids, counts, temps, top_ks, top_ps)
 
         self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
                                   static_argnums=(5,))
         self._prefill_fn = jax.jit(_prefill, donate_argnums=(2,))
         self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
+        self._scatter_fn = jax.jit(_scatter_toks, donate_argnums=(0,))
         self._sample_fn = jax.jit(_sample)
         self._sample_plain_fn = jax.jit(_sample_plain)
+        self._first_fn = jax.jit(_first)
+        self._first_plain_fn = jax.jit(_first_plain)
 
     # -- introspection ----------------------------------------------------
 
@@ -368,7 +478,16 @@ class ServingEngine:
 
     def cancel(self, uid: int) -> Optional[RequestResult]:
         """Evict a queued, mid-prefill or mid-decode request. Returns its
-        partial result (None if the uid is unknown)."""
+        partial result (None if the uid is unknown).
+
+        Under the overlapped loop a cancelled request's in-flight work
+        is dropped, not flushed: tokens already sampled on device but
+        not yet retired are discarded (no ``on_token`` callback), a
+        packed-but-undispatched prefill chunk row is skipped at
+        dispatch, and a landed-but-unmerged staging row is never
+        committed — so the partial result holds exactly the tokens the
+        host had observed, the same cut as the sequential scheduler.
+        """
         for i, req in enumerate(self._queue):
             if req.uid == uid:
                 self._queue.pop(i)
@@ -394,10 +513,21 @@ class ServingEngine:
 
     @property
     def has_work(self) -> bool:
-        return bool(self._queue) or any(s is not None for s in self._slots)
+        return (bool(self._queue)
+                or any(s is not None for s in self._slots)
+                or self._inflight is not None)
 
     def next_arrival(self) -> Optional[float]:
         return self._queue[0].arrival_time if self._queue else None
+
+    @property
+    def _pipeline_idle(self) -> bool:
+        """No in-flight or staged work anywhere in the pipeline — safe
+        to jump the clock to the next arrival."""
+        return (self.num_active == 0 and not self._prefill_order
+                and self._next_chunk is None
+                and self._pending_merge is None
+                and self._inflight is None)
 
     # -- scheduler --------------------------------------------------------
 
@@ -407,17 +537,32 @@ class ServingEngine:
         self._temps[i] = 0.0
         self._top_ks[i] = 0
         self._top_ps[i] = 1.0
+        self._uids[i] = 0
         if i in self._prefill_order:
             self._prefill_order.remove(i)
 
-    def _sample_one(self, req: Request, logits_row: Array) -> int:
-        key = jax.random.fold_in(
-            jax.random.fold_in(self._key, req.uid), self._step_count)
+    def _activate(self, i: int) -> None:
+        """Load slot i's sampling params into the batched host arrays."""
+        slot = self._slots[i]
+        self._active[i] = True
+        self._temps[i] = slot.req.temperature
+        self._top_ks[i] = slot.req.top_k
+        self._top_ps[i] = slot.req.top_p
+        self._uids[i] = slot.req.uid
+
+    def _sample_one(self, req: Request, logits_row: Array,
+                    count: int) -> int:
+        """Sample one row with its schedule-invariant (uid, count) key.
+        ``count`` is the row's token index (0 = the first token sampled
+        at admission)."""
+        uids = jnp.full((1,), req.uid, jnp.int32)
+        counts = jnp.full((1,), count, jnp.int32)
         temps = jnp.full((1,), req.temperature, jnp.float32)
         if req.top_k <= 0 and req.top_p >= 1.0:
-            return int(self._sample_plain_fn(key, logits_row, temps)[0])
+            return int(self._sample_plain_fn(logits_row, uids, counts,
+                                             temps)[0])
         return int(self._sample_fn(
-            key, logits_row, temps,
+            logits_row, uids, counts, temps,
             jnp.full((1,), req.top_k, jnp.int32),
             jnp.full((1,), req.top_p, jnp.float32))[0])
 
@@ -445,6 +590,7 @@ class ServingEngine:
             self.staging = self._reset_fn(
                 self.staging, self._fresh_row,
                 jnp.asarray(admitted, jnp.int32))
+            self._dispatch_seq += 1
 
     def _plan_prefill(self) -> list[tuple[int, int]]:
         """Token-budget packer: split this step's prompt-token budget
@@ -491,6 +637,19 @@ class ServingEngine:
             budget -= t
         return grants
 
+    def _record_prefill_stats(self, n_rows: int, spent: int,
+                              l_pad: int) -> None:
+        self._stats["prefill_tokens"] += spent
+        self._stats["prefill_chunks"] += n_rows
+        self._stats["prefill_calls"] += 1
+        self._stats["prefill_padded_tokens"] += n_rows * l_pad
+        self._stats["prefill_rows_max"] = max(
+            self._stats["prefill_rows_max"], n_rows)
+        self._stats["max_prefill_tokens_per_step"] = max(
+            self._stats["max_prefill_tokens_per_step"], spent)
+
+    # -- sequential scheduler ---------------------------------------------
+
     def _prefill_work(self) -> None:
         """Advance every scheduled admission by its granted chunk in ONE
         padded batched ``prefill_chunk`` call, then commit + activate the
@@ -502,10 +661,10 @@ class ServingEngine:
         l_pad = int(ts.max())
         if self.bucket_prefill:
             l_pad = _next_pow2(l_pad)
-        toks = np.zeros((len(grants), l_pad), np.int32)
-        for r, (i, t) in enumerate(grants):
-            slot = self._slots[i]
-            toks[r, :t] = slot.req.prompt[slot.cursor:slot.cursor + t]
+        toks = self._pack.pack(
+            [self._slots[i].req.prompt[self._slots[i].cursor:
+                                       self._slots[i].cursor + t]
+             for i, t in grants], l_pad)
         # all-full rows take the legacy unpadded path (bit-exact with the
         # serial schedule); ragged rows carry per-row valid lengths
         vl = None if (ts == l_pad).all() else jnp.asarray(ts)
@@ -513,16 +672,8 @@ class ServingEngine:
         logits, self.staging = self._prefill_fn(
             self._step_params, self._decode_proj, self.staging,
             jnp.asarray(toks), idx, vl)
-
-        spent = int(ts.sum())
-        self._stats["prefill_tokens"] += spent
-        self._stats["prefill_chunks"] += len(grants)
-        self._stats["prefill_calls"] += 1
-        self._stats["prefill_padded_tokens"] += len(grants) * l_pad
-        self._stats["prefill_rows_max"] = max(
-            self._stats["prefill_rows_max"], len(grants))
-        self._stats["max_prefill_tokens_per_step"] = max(
-            self._stats["max_prefill_tokens_per_step"], spent)
+        self._dispatch_seq += 1
+        self._record_prefill_stats(len(grants), int(ts.sum()), l_pad)
 
         done: list[tuple[int, int]] = []
         for r, (i, t) in enumerate(grants):
@@ -535,34 +686,265 @@ class ServingEngine:
         self.pool = self._commit_fn(
             self.pool, self.staging,
             jnp.asarray([i for _, i in done], jnp.int32))
+        self._dispatch_seq += 1
         for r, i in done:
             self._prefill_order.remove(i)
             self._finish_admission(i, logits[r:r + 1])
 
     def _finish_admission(self, i: int, logits: Array) -> None:
-        """Activate pool row i (already committed from staging)."""
+        """Activate pool row i (already committed from staging). Blocks
+        on the sampled first token — readiness, not dispatch — before
+        stamping its time."""
         slot = self._slots[i]
-        first = self._sample_one(slot.req, logits)
+        first = self._sample_one(slot.req, logits, count=0)
         now = self._now()
+        if slot.req.on_token is not None:
+            slot.req.on_token(first, now)
         slot.result.admit_time = now
         slot.result.tokens = [first]
         slot.result.token_times = [now]
+        slot.emitted = 1
         self._ttfts.append(now - slot.req.arrival_time)
-        self._active[i] = True
-        self._temps[i] = slot.req.temperature
-        self._top_ks[i] = slot.req.top_k
-        self._top_ps[i] = slot.req.top_p
+        self._activate(i)
         self._toks[i] = first
         self._stats["emitted_tokens"] += 1
         self._stats["admitted"] += 1
 
+    # -- overlapped scheduler ---------------------------------------------
+
+    def _retire(self, finished: list[RequestResult]) -> None:
+        """Fetch the one-step-delayed token buffers, append the now-ready
+        tokens, evict finished rows. The ONLY blocking point of the
+        overlapped loop; the blocked time is the step's decode stall."""
+        rec = self._inflight
+        if rec is None:
+            return
+        self._inflight = None
+        t0 = time.perf_counter()
+        first = rec["first"]
+        dec = rec["decode"]
+        first_np = np.asarray(first[2]) if first is not None else None
+        dec_np = np.asarray(dec[2]) if dec is not None else None
+        self._stall_ms.append((time.perf_counter() - t0) * 1e3)
+        self._depths.append(self._dispatch_seq - rec["seq"])
+        now = self._now()
+        done_now: set[int] = set()
+        if first is not None:
+            for i, uid, tok in zip(first[0], first[1], first_np):
+                slot = self._slots[i]
+                if slot is None or slot.req.uid != uid:
+                    continue               # cancelled while in flight
+                tok = int(tok)
+                if slot.req.on_token is not None:
+                    slot.req.on_token(tok, now)
+                slot.result.admit_time = now
+                slot.result.tokens = [tok]
+                slot.result.token_times = [now]
+                self._ttfts.append(now - slot.req.arrival_time)
+                self._toks[i] = tok
+                self._stats["emitted_tokens"] += 1
+                self._stats["admitted"] += 1
+                if self._done(slot):
+                    # finished on its first token: the decode that ran
+                    # concurrently was speculative — drop its token
+                    done_now.add(i)
+                    finished.append(self._finish(i))
+        if dec is not None:
+            self._stats["decode_steps"] += 1
+            self._stats["decode_slot_steps"] += len(dec[0])
+            for i, uid in zip(dec[0], dec[1]):
+                if i in done_now:
+                    continue
+                slot = self._slots[i]
+                if slot is None or slot.req.uid != uid:
+                    continue               # cancelled while in flight
+                tok = int(dec_np[i])
+                if slot.req.on_token is not None:
+                    slot.req.on_token(tok, now)
+                slot.result.tokens.append(tok)
+                slot.result.token_times.append(now)
+                self._toks[i] = tok
+                self._stats["emitted_tokens"] += 1
+                if self._done(slot):
+                    finished.append(self._finish(i))
+
+    def _merge_pending(self) -> Optional[tuple]:
+        """Commit admissions whose final chunk landed last step into the
+        slot pool (one deferred merge scatter), sample their first
+        tokens from the saved final-chunk logits, and scatter them into
+        the device token feed — all dispatched AHEAD of this step's
+        decode. Returns the retire record (slots, uids, tokens_dev)."""
+        pm = self._pending_merge
+        if pm is None:
+            return None
+        self._pending_merge = None
+        keep = [(i, uid, r) for i, uid, r in pm["rows"]
+                if self._slots[i] is not None
+                and self._slots[i].req.uid == uid]
+        if not keep:
+            return None
+        idx_np = np.asarray([i for i, _, _ in keep], np.int32)
+        idx = jnp.asarray(idx_np)
+        self.pool = self._commit_fn(self.pool, self.staging, idx)
+        self._dispatch_seq += 1
+        ridx = jnp.asarray([r for _, _, r in keep], jnp.int32)
+        uids = np.asarray([uid for _, uid, _ in keep], np.int32)
+        counts = np.zeros(len(keep), np.int32)       # first token: index 0
+        reqs = [self._slots[i].req for i, _, _ in keep]
+        temps = np.asarray([q.temperature for q in reqs], np.float32)
+        tks = np.asarray([q.top_k for q in reqs], np.int32)
+        tps = np.asarray([q.top_p for q in reqs], np.float32)
+        if (tks > 0).any() or (tps < 1.0).any():
+            toks = self._first_fn(pm["logits"], ridx, jnp.asarray(uids),
+                                  jnp.asarray(counts), jnp.asarray(temps),
+                                  jnp.asarray(tks), jnp.asarray(tps))
+        else:
+            toks = self._first_plain_fn(pm["logits"], ridx,
+                                        jnp.asarray(uids),
+                                        jnp.asarray(counts),
+                                        jnp.asarray(temps))
+        self._dispatch_seq += 1
+        seq = self._dispatch_seq        # producing dispatch, for depth
+        self._feed = self._scatter_fn(self._feed, idx, toks)
+        self._dispatch_seq += 1
+        for i, _, _ in keep:
+            self._activate(i)
+            self._slots[i].emitted = 1
+        return (list(idx_np), list(uids), toks, seq)
+
+    def _dispatch_decode(self) -> Optional[tuple]:
+        """Enqueue one batched decode + sample over the active rows,
+        reading the token feed straight from device. Returns the retire
+        record (rows, uids, tokens_dev) fetched NEXT step."""
+        rows = np.nonzero(self._active)[0]
+        if rows.size == 0:
+            return None
+        counts = np.zeros(self.max_slots, np.int32)
+        for i in rows:
+            counts[i] = self._slots[i].emitted
+        logits, self.pool = self._decode_fn(
+            self._step_params, self._decode_proj, self.pool,
+            self._feed, jnp.asarray(self._active),
+            bool(self._active.all()))
+        self._dispatch_seq += 1
+        uids = jnp.asarray(self._uids)
+        counts_j = jnp.asarray(counts)
+        if (self._top_ks > 0).any() or (self._top_ps < 1.0).any():
+            toks = self._sample_fn(logits, uids, counts_j,
+                                   jnp.asarray(self._temps),
+                                   jnp.asarray(self._top_ks),
+                                   jnp.asarray(self._top_ps))
+        else:
+            toks = self._sample_plain_fn(logits, uids, counts_j,
+                                         jnp.asarray(self._temps))
+        self._dispatch_seq += 1
+        # the sampled buffer IS the next feed: merged rows' first tokens
+        # are scattered on top next step, inactive rows are don't-care
+        self._feed = toks
+        for i in rows:
+            self._slots[i].emitted += 1
+        return (list(rows), [int(self._uids[i]) for i in rows], toks,
+                self._dispatch_seq)
+
+    def _dispatch_prefill(self) -> None:
+        """Enqueue the chunk packed last step (behind this step's
+        decode). Rows cancelled since packing are dropped; rows whose
+        prompt completes queue the deferred merge for next step."""
+        ch = self._next_chunk
+        if ch is None:
+            return
+        self._next_chunk = None
+        live = [j for j, (i, uid, _) in enumerate(ch["grants"])
+                if self._slots[i] is not None
+                and self._slots[i].req.uid == uid]
+        if not live:
+            return
+        grants = [ch["grants"][j] for j in live]
+        toks = ch["toks"]
+        if len(live) != len(ch["grants"]):
+            toks = toks[live]
+        ts = np.asarray([t for _, _, t in grants], np.int32)
+        l_pad = ch["l_pad"]
+        vl = None if (ts == l_pad).all() else jnp.asarray(ts)
+        idx = jnp.asarray([i for i, _, _ in grants], jnp.int32)
+        logits, self.staging = self._prefill_fn(
+            self._step_params, self._decode_proj, self.staging,
+            jnp.asarray(toks), idx, vl)
+        self._dispatch_seq += 1
+        self._record_prefill_stats(len(grants), int(ts.sum()), l_pad)
+        done: list[tuple[int, int, int]] = []
+        for r, (i, uid, t) in enumerate(grants):
+            slot = self._slots[i]
+            slot.cursor += t
+            if slot.cursor == len(slot.req.prompt):
+                self._prefill_order.remove(i)
+                done.append((i, uid, r))
+        if done:
+            self._pending_merge = {"rows": done, "logits": logits}
+
+    def _pack_next_chunk(self) -> None:
+        """Plan + pack the NEXT prefill chunk into the idle half of the
+        double buffer while this step's chunk is still in flight."""
+        grants = self._plan_prefill()
+        if not grants:
+            return
+        ts = np.asarray([t for _, t in grants], np.int32)
+        l_pad = int(ts.max())
+        if self.bucket_prefill:
+            l_pad = _next_pow2(l_pad)
+        toks = self._pack.pack(
+            [self._slots[i].req.prompt[self._slots[i].cursor:
+                                       self._slots[i].cursor + t]
+             for i, t in grants], l_pad)
+        self._next_chunk = {
+            "grants": [(i, self._slots[i].req.uid, t) for i, t in grants],
+            "toks": toks, "l_pad": l_pad}
+
+    def _step_overlap(self) -> list[RequestResult]:
+        """One turn of the pipelined loop — see the module docstring's
+        retire/admit/merge/decode/prefill/pack timeline."""
+        finished: list[RequestResult] = []
+        self._retire(finished)
+        self._admissions(self._now())
+        first_rec = self._merge_pending()
+        decode_rec = self._dispatch_decode()
+        self._dispatch_prefill()
+        self._pack_next_chunk()
+        if first_rec is not None or decode_rec is not None:
+            # depth baseline: the EARLIEST producing sample dispatch —
+            # everything enqueued after it (token-feed scatter, prefill
+            # chunk) is work the device queue runs ahead with
+            seq = min(r[3] for r in (first_rec, decode_rec)
+                      if r is not None)
+            self._inflight = {"first": first_rec, "decode": decode_rec,
+                              "seq": seq}
+        return finished
+
+    def flush(self) -> list[RequestResult]:
+        """Drain the overlap pipeline's in-flight tail without
+        dispatching new work: retire the delayed token buffer, apply any
+        pending merge (whose first tokens are then retired too). After
+        ``flush()`` every token produced so far is host-visible. No-op
+        on the sequential scheduler. Returns newly finished results."""
+        finished: list[RequestResult] = []
+        while self._inflight is not None or self._pending_merge is not None:
+            self._retire(finished)
+            rec = self._merge_pending()
+            if rec is not None:
+                self._inflight = {"first": rec, "decode": None,
+                                  "seq": rec[3]}
+        return finished
+
     # -- decode -----------------------------------------------------------
 
     def step(self) -> list[RequestResult]:
-        """Admit what has arrived, run one batched prefill chunk over the
-        staged admissions, one batched decode step over the active slots,
-        and evict finished sequences. Returns newly finished results
-        (possibly empty)."""
+        """Admit what has arrived, advance prefill and decode, evict
+        finished sequences. Returns newly finished results (possibly
+        empty). Sequential mode runs one packed prefill chunk then one
+        blocking batched decode; overlap mode runs the pipelined
+        retire/merge/dispatch turn (module docstring)."""
+        if self.overlap:
+            return self._step_overlap()
         finished: list[RequestResult] = []
         self._admissions(self._now())
         self._prefill_work()
@@ -573,25 +955,39 @@ class ServingEngine:
         if not self._active.any():
             return finished
 
-        self._step_count += 1
         # static all-active flag: a fully occupied pool skips the
         # pool-wide freeze select (bit-identical either way)
+        counts = np.zeros(self.max_slots, np.int32)
+        for i in np.nonzero(self._active)[0]:
+            counts[i] = self._slots[i].emitted
         logits, self.pool = self._decode_fn(
             self._step_params, self._decode_proj, self.pool,
             jnp.asarray(self._toks), jnp.asarray(self._active),
             bool(self._active.all()))
-        key = jax.random.fold_in(self._key, self._step_count)
+        self._dispatch_seq += 1
         # host-side check: only pay the full-vocab sort/cumsum masks when
         # some active row actually uses top-k/p (the masks are identity
         # at the defaults, so both paths sample identically)
         if (self._top_ks > 0).any() or (self._top_ps < 1.0).any():
-            toks = np.asarray(self._sample_fn(key, logits,
-                                              jnp.asarray(self._temps),
-                                              jnp.asarray(self._top_ks),
-                                              jnp.asarray(self._top_ps)))
+            toks_dev = self._sample_fn(logits, jnp.asarray(self._uids),
+                                       jnp.asarray(counts),
+                                       jnp.asarray(self._temps),
+                                       jnp.asarray(self._top_ks),
+                                       jnp.asarray(self._top_ps))
         else:
-            toks = np.asarray(self._sample_plain_fn(
-                key, logits, jnp.asarray(self._temps)))
+            toks_dev = self._sample_plain_fn(logits,
+                                             jnp.asarray(self._uids),
+                                             jnp.asarray(counts),
+                                             jnp.asarray(self._temps))
+        self._dispatch_seq += 1
+        seq_at_sample = self._dispatch_seq
+        # block on token READINESS before stamping times (under async
+        # dispatch an unblocked perf_counter delta would time the
+        # enqueue, not the token)
+        t0 = time.perf_counter()
+        toks = np.asarray(toks_dev)
+        self._stall_ms.append((time.perf_counter() - t0) * 1e3)
+        self._depths.append(self._dispatch_seq - seq_at_sample)
         now = self._now()
         n_act = int(self._active.sum())
         self._stats["decode_steps"] += 1
@@ -599,8 +995,11 @@ class ServingEngine:
         for i in np.nonzero(self._active)[0]:
             slot = self._slots[i]
             tok = int(toks[i])
+            if slot.req.on_token is not None:
+                slot.req.on_token(tok, now)
             slot.result.tokens.append(tok)
             slot.result.token_times.append(now)
+            slot.emitted += 1
             self._toks[i] = tok
             self._stats["emitted_tokens"] += 1
             if self._done(slot):
@@ -623,7 +1022,8 @@ class ServingEngine:
     # -- batch runner -----------------------------------------------------
 
     def run(self, realtime: bool = False) -> list[RequestResult]:
-        """Drive ``step()`` until queue and slots drain.
+        """Drive ``step()`` until queue, slots and the overlap pipeline
+        drain.
 
         ``realtime=True`` honors future ``arrival_time``s by sleeping
         while the pool is empty (Poisson-traffic benchmarking); otherwise
@@ -631,8 +1031,7 @@ class ServingEngine:
         """
         results: list[RequestResult] = []
         while self.has_work:
-            if (self.num_active == 0 and not self._prefill_order
-                    and self._queue):
+            if self._pipeline_idle and self._queue:
                 wait = self._queue[0].arrival_time - self._now()
                 if wait > 0:
                     if realtime:
@@ -648,6 +1047,7 @@ class ServingEngine:
     def stats(self) -> dict:
         s = dict(self._stats)
         s.update(self._serve_paths)
+        s["overlap"] = self.overlap
         steps = max(s["decode_steps"], 1)
         # fraction of slot-steps that carried a live sequence
         s["mean_occupancy"] = (s["decode_slot_steps"]
@@ -663,4 +1063,16 @@ class ServingEngine:
         if self._ttfts:
             s["ttft_p50"] = float(np.percentile(self._ttfts, 50))
             s["ttft_p99"] = float(np.percentile(self._ttfts, 99))
+        # per-step pipeline counters: how long the host blocked for the
+        # token buffer (readiness stall) and how many dispatches the
+        # device queue ran ahead of the fetched buffer
+        if self._stall_ms:
+            s["decode_stall_ms_p50"] = float(np.percentile(
+                self._stall_ms, 50))
+            s["decode_stall_ms_p99"] = float(np.percentile(
+                self._stall_ms, 99))
+            s["decode_stall_ms_max"] = float(np.max(self._stall_ms))
+        if self._depths:
+            s["dispatch_depth_mean"] = float(np.mean(self._depths))
+            s["dispatch_depth_max"] = int(np.max(self._depths))
         return s

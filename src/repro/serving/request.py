@@ -5,13 +5,23 @@ parameters. A ``RequestResult`` is what the engine hands back: the
 generated tokens plus the wall-clock trace (arrival -> admission ->
 per-token -> finish) that the latency benchmarks aggregate into
 TTFT / per-token percentiles (benchmarks/serve_latency.py).
+
+Timing contract: every entry of ``token_times`` is a token *readiness*
+time — the engine records it only after blocking on the device buffer
+that holds the token, never at dispatch. Under the overlapped step loop
+(``ServingEngine(overlap=True)``) tokens are sampled into a device
+buffer that the host fetches one step later, so the token value (and
+its ``on_token`` callback, below) arrives one engine step after the
+decode that produced it; the recorded time is when the host observed
+the ready value, an upper bound on device completion that coincides
+with it whenever the host is the one waiting.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
 import random
-from typing import Optional, Sequence
+from typing import Callable, Optional, Sequence
 
 _uid_counter = itertools.count()
 
@@ -33,6 +43,14 @@ class Request:
     smallest p-mass nucleus tokens per step; they are applied per slot
     row inside the engine's jitted sample step and leave greedy decoding
     untouched.
+
+    ``on_token`` is the delayed-token stream hook: the engine calls it
+    as ``on_token(token, t)`` for every generated token at the moment
+    the token becomes *ready on the host* (see module docstring) — in
+    arrival order, before the token is appended to the result. Under
+    the overlapped loop this fires one engine step after the producing
+    decode; in-flight tokens of a cancelled request are dropped without
+    a callback. Exceptions propagate out of ``step()``.
     """
     prompt: Sequence[int]
     max_new_tokens: int = 16
@@ -42,6 +60,7 @@ class Request:
     eos_id: Optional[int] = None
     arrival_time: float = 0.0
     uid: int = dataclasses.field(default_factory=next_uid)
+    on_token: Optional[Callable[[int, float], None]] = None
 
 
 @dataclasses.dataclass

@@ -25,8 +25,12 @@ uniform across the tree:
 
 All engine mutations reduce to the primitives here — multi-index
 gather/scatter (``read_slots`` / ``write_slots``), their single-slot
-dynamic-slice forms, and a masked freeze of inactive slots — each
-written once over that axis map instead of per leaf. These run inside
+dynamic-slice forms, the fused staging-to-pool commit
+(``merge_slots``), and a masked freeze of inactive slots — each
+written once over that axis map instead of per leaf. ``PackBuffer`` is
+the host-side counterpart: the double-buffered token staging the
+overlapped engine packs the NEXT prefill chunk into while the current
+one is in flight. These run inside
 the engine's jitted step functions; ``idx`` and ``active`` are traced,
 so admission at any slot reuses one compile (one executable per
 distinct index-vector LENGTH for the multi-index forms).
@@ -35,6 +39,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 Array = jax.Array
 
@@ -108,6 +113,55 @@ def read_slot(pool: dict, idx: Array) -> dict:
     def _read(p, axis):
         return jax.lax.dynamic_slice_in_dim(p, idx, 1, axis=axis)
     return tree_slot_map(_read, pool)
+
+
+def merge_slots(dst: dict, src: dict, idx: Array) -> dict:
+    """Copy rows ``idx`` ((P,) int32) of ``src`` into the same rows of
+    ``dst`` — the commit scatter that promotes finished staging-pool
+    rows into the slot pool. One tree traversal: each leaf is a gather
+    at the slot axis fused with a scatter at the same indices (the
+    separate ``read_slots`` + ``write_slots`` pair would walk the tree
+    twice and materialize the gathered sub-state between the jit-traced
+    calls). Under the overlapped step loop this is the *deferred merge*:
+    it is dispatched at the START of the step after the prefill chunk
+    landed, ahead of that step's decode, so decode never waits on an
+    in-flight prefill (repro/serving/engine.py)."""
+    def _merge(d, s, axis):
+        ix = (slice(None),) * axis + (idx,)
+        return d.at[ix].set(jnp.take(s, idx, axis=axis).astype(d.dtype))
+    return tree_slot_map(_merge, dst, src)
+
+
+class PackBuffer:
+    """Double-buffered host staging for packed prefill-chunk tokens.
+
+    The overlapped engine packs prompt chunk N+1 on the host while chunk
+    N's dispatch (and its host-to-device copy) is still in flight. Two
+    preallocated ``(max_rows, max_chunk)`` int32 buffers alternate:
+    ``pack()`` fills the idle buffer and returns a ``(P, l_pad)`` view
+    of it, so the view handed to chunk N's ``jnp.asarray`` is never the
+    buffer being overwritten for chunk N+1. (On CPU the copy is
+    synchronous and this is belt-and-braces; on accelerators with async
+    host-to-device transfer the flip is what makes in-place repacking
+    safe.) Rows are zero-padded to ``l_pad``; ragged rows carry their
+    real lengths separately (``valid_len`` in the engine)."""
+
+    def __init__(self, max_rows: int, max_chunk: int):
+        self._bufs = [np.zeros((max_rows, max_chunk), np.int32)
+                      for _ in range(2)]
+        self._flip = 0
+
+    def pack(self, rows: list, l_pad: int) -> np.ndarray:
+        """Fill the idle buffer with ``rows`` (sequences of ints, each
+        <= l_pad) zero-padded to ``l_pad`` and return the (P, l_pad)
+        view. Flips buffers on every call."""
+        buf = self._bufs[self._flip]
+        self._flip ^= 1
+        view = buf[:len(rows), :l_pad]
+        view[:] = 0
+        for r, toks in enumerate(rows):
+            view[r, :len(toks)] = toks
+        return view
 
 
 def freeze_inactive(pool_old: dict, pool_new: dict, active: Array,

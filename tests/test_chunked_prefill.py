@@ -534,7 +534,9 @@ def test_top_k_one_and_tiny_top_p_reduce_to_greedy():
 
 def test_sampling_defaults_change_nothing():
     """temperature>0 with default top_k/top_p must draw the same stream
-    as the pre-top-k/p engine did (same keys, same scaled logits)."""
+    across runs: the per-row (uid, token-index) sample keys are
+    schedule-invariant, so a pinned uid reproduces its draws exactly
+    (and the top-k/p masks are identity at the defaults)."""
     cfg = _cfg("darkformer")
     params = _params(cfg)
     prompt = _prompt(cfg.vocab, 8, seed=51)

@@ -1,0 +1,312 @@
+"""Overlapped serving loop (ISSUE 8 tentpole).
+
+The pipelined scheduler (``ServingEngine(overlap=True)``) reorders WHEN
+work is dispatched — decode first, prefill behind it, packing and
+readback off the critical path — but runs the SAME jitted step
+functions on the same states, so its token streams must be
+bitwise-identical to the sequential reference scheduler. These tests
+pin that contract under the adversarial schedules:
+
+  * Poisson admission storms (greedy and sampled) across kernels and
+    both chunked + blocking admission — every request's stream equal;
+  * mid-stream cancellation triggered by the delayed ``on_token``
+    stream itself (in-flight tokens of the victim are discarded in both
+    modes), plus mid-prefill and queued cancels;
+  * the solo bitwise reference, the chunk-budget invariant, the
+    pipeline stats counters, ``flush()`` drain semantics, and the
+    ``on_token`` readiness-order contract;
+  * a mesh-sharded pool under forced multi-device (the deferred
+    ``merge_slots`` scatter must commit correctly across shards) — runs
+    in the multidevice CI job, skips at 1 device;
+  * slots-level properties of the new primitives (``merge_slots``
+    equals the read+write pair; ``PackBuffer`` really double-buffers).
+"""
+import dataclasses
+import random
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs as cfgs
+from repro.models import lm
+from repro.serving import Request, ServingEngine
+from repro.serving import slots as slot_ops
+
+
+def _cfg(kind: str, **kw):
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _params(cfg):
+    return lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _storm(vocab, *, n=8, seed=0, rate=150.0, temperature=0.0,
+           sampled_mix=False):
+    """Poisson admission storm with PINNED uids so the per-row sample
+    keys (and hence sampled streams) are comparable across engines."""
+    rng = random.Random(seed)
+    t, reqs = 0.0, []
+    for i in range(n):
+        t += rng.expovariate(rate)
+        kw = {}
+        if sampled_mix and i % 3 == 1:
+            kw = {"top_k": 7, "top_p": 0.9}
+        reqs.append(Request(
+            prompt=[rng.randrange(vocab)
+                    for _ in range(rng.randint(6, 30))],
+            max_new_tokens=rng.randint(3, 9), arrival_time=t,
+            temperature=temperature, uid=5000 + i, **kw))
+    return reqs
+
+
+def _run(params, cfg, reqs, *, overlap, chunk=16, slots=3, max_len=48,
+         mesh=None):
+    eng = ServingEngine(params, cfg, max_slots=slots, max_len=max_len,
+                        chunk_tokens=chunk, seed=0, overlap=overlap,
+                        mesh=mesh)
+    for r in reqs:
+        eng.submit(r)
+    res = eng.run()
+    return {r.uid: list(r.tokens) for r in res}, eng
+
+
+# ---------------------------------------------------------------------------
+# stream equality
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,chunk", [("darkformer", 16),
+                                        ("darkformer", None),
+                                        ("exact", 16)])
+def test_overlap_matches_sequential_greedy_storm(kind, chunk):
+    """Greedy Poisson storm: every request's emitted tokens must be
+    bitwise-identical between the sequential and overlapped schedulers,
+    for chunked AND blocking admission, PRF and exact-KV kernels."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    seq, _ = _run(params, cfg, _storm(cfg.vocab, seed=1),
+                  overlap=False, chunk=chunk)
+    ovl, _ = _run(params, cfg, _storm(cfg.vocab, seed=1),
+                  overlap=True, chunk=chunk)
+    assert set(seq) == set(ovl)
+    for uid in seq:
+        assert seq[uid] == ovl[uid], uid
+    assert any(len(t) > 0 for t in seq.values())
+
+
+def test_overlap_matches_sequential_sampled_storm():
+    """Sampled storm (temperature 0.8, a third of the rows with
+    top-k/top-p): the per-row (uid, token-index) sample keys are
+    schedule-invariant, so even stochastic streams match bitwise."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    mk = lambda: _storm(cfg.vocab, seed=2, temperature=0.8,
+                        sampled_mix=True)
+    seq, _ = _run(params, cfg, mk(), overlap=False)
+    ovl, _ = _run(params, cfg, mk(), overlap=True)
+    for uid in seq:
+        assert seq[uid] == ovl[uid], uid
+
+
+def test_overlap_matches_solo_reference():
+    """One request through the overlapped engine == the solo
+    whole-prompt prefill + decode_step chain, bit-for-bit."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prompt = jax.random.randint(jax.random.PRNGKey(3), (8,), 0,
+                                cfg.vocab).tolist()
+    lg, st = lm.prefill(params, cfg, {"tokens": jnp.asarray([prompt])},
+                        max_len=48)
+    ref = [int(jnp.argmax(lg[0, -1]))]
+    for _ in range(5):
+        lg, st = lm.decode_step(params, cfg, jnp.asarray(ref[-1:]), st)
+        ref.append(int(jnp.argmax(lg[0])))
+    got, _ = _run(params, cfg,
+                  [Request(prompt=prompt, max_new_tokens=6, uid=77)],
+                  overlap=True, chunk=None)
+    assert got[77] == ref
+
+
+# ---------------------------------------------------------------------------
+# cancellation and eviction
+# ---------------------------------------------------------------------------
+
+def _run_cancel_trace(params, cfg, overlap):
+    """Cancel a mid-decode request the moment its OBSERVED stream
+    reaches 3 tokens (via on_token, i.e. at host readiness — in overlap
+    mode more tokens are already in flight on device and must be
+    dropped), one request while still queued, and one mid-prefill."""
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=96,
+                        chunk_tokens=8, seed=0, overlap=overlap)
+    reqs = _storm(cfg.vocab, n=4, seed=4)
+    victim = reqs[0]
+    seen = []
+
+    def hook(tok, t):
+        seen.append(tok)
+        if len(seen) == 3:
+            eng.cancel(victim.uid)
+    victim.on_token = hook
+    long = Request(prompt=[1] * 64, max_new_tokens=4,
+                   arrival_time=0.0, uid=6000)   # several chunks long
+    queued = Request(prompt=[2] * 8, max_new_tokens=4,
+                     arrival_time=1e6, uid=6001)  # never arrives
+    for r in [long, queued] + reqs:
+        eng.submit(r)
+    eng.step()                      # long admitted, mid-prefill
+    assert eng.num_prefilling >= 1
+    res_long = eng.cancel(long.uid)
+    res_q = eng.cancel(queued.uid)
+    done = {r.uid: list(r.tokens) for r in eng.run()}
+    done.update({r.uid: list(r.tokens) for r in eng.flush()})
+    return seen, res_long, res_q, done
+
+
+def test_cancel_equality_and_discard():
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    out = [_run_cancel_trace(params, cfg, overlap)
+           for overlap in (False, True)]
+    (seen_a, long_a, q_a, done_a), (seen_b, long_b, q_b, done_b) = out
+    # the victim observed exactly 3 tokens in BOTH modes: overlap's
+    # in-flight tokens were discarded, not flushed
+    assert len(seen_a) == len(seen_b) == 3
+    assert seen_a == seen_b
+    # mid-prefill cancel: no tokens ever emitted, slot freed
+    for long_res in (long_a, long_b):
+        assert long_res.cancelled and long_res.tokens == []
+    assert q_a.cancelled and q_b.cancelled
+    # survivors' streams are unaffected and identical across modes
+    assert set(done_a) == set(done_b)
+    for uid in done_a:
+        assert done_a[uid] == done_b[uid], uid
+
+
+# ---------------------------------------------------------------------------
+# pipeline invariants, stats, drain
+# ---------------------------------------------------------------------------
+
+def test_overlap_stats_and_chunk_budget():
+    """Overlap stats must surface the scheduler flag and the per-step
+    pipeline counters, and the chunk-tokens budget invariant must hold
+    under the pipelined dispatch too."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    _, eng = _run(params, cfg, _storm(cfg.vocab, seed=5), overlap=True,
+                  chunk=16)
+    st = eng.stats
+    assert st["overlap"] is True
+    assert st["max_prefill_tokens_per_step"] <= 16
+    for key in ("decode_stall_ms_p50", "decode_stall_ms_p99",
+                "decode_stall_ms_max", "dispatch_depth_mean",
+                "dispatch_depth_max"):
+        assert isinstance(st[key], (int, float)), key
+    # the device queue ran ahead of the fetched buffer at least once
+    # (the whole point of the pipeline)
+    assert st["dispatch_depth_max"] >= 1
+    _, eng_seq = _run(params, cfg, _storm(cfg.vocab, seed=5),
+                      overlap=False, chunk=16)
+    assert eng_seq.stats["overlap"] is False
+
+
+def test_on_token_readiness_order():
+    """on_token fires once per generated token, at host readiness, with
+    non-decreasing times matching the recorded token_times."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    calls = []
+    req = Request(prompt=[3] * 8, max_new_tokens=5, uid=81,
+                  on_token=lambda tok, t: calls.append((tok, t)))
+    got, _ = _run(params, cfg, [req], overlap=True)
+    assert [tok for tok, _ in calls] == got[81]
+    times = [t for _, t in calls]
+    assert times == sorted(times)
+
+
+def test_flush_drains_inflight():
+    """After flush(), every token produced so far is host-visible even
+    though the engine still has work; flush on the sequential engine is
+    a no-op."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    eng = ServingEngine(params, cfg, max_slots=2, max_len=48,
+                        chunk_tokens=16, seed=0, overlap=True)
+    uid = eng.submit(Request(prompt=[5] * 8, max_new_tokens=12, uid=91))
+    for _ in range(4):
+        eng.step()
+    slot = next(s for s in eng._slots if s is not None)
+    assert slot.emitted > len(slot.result.tokens)   # tokens in flight
+    eng.flush()
+    assert slot.emitted == len(slot.result.tokens)  # all retired
+    assert eng.has_work                             # request unfinished
+    res = eng.run()
+    assert len({r.uid: r for r in res}[uid].tokens) == 12
+
+    eng_seq = ServingEngine(params, cfg, max_slots=2, max_len=48,
+                            seed=0)
+    assert eng_seq.flush() == []
+
+
+# ---------------------------------------------------------------------------
+# slots-level primitives
+# ---------------------------------------------------------------------------
+
+def test_merge_slots_matches_read_write_pair():
+    """merge_slots == write_slots(dst, read_slots(src, idx), idx) on
+    every leaf of a real serve-state pytree."""
+    cfg = _cfg("darkformer")
+    src = lm.init_serve_state(cfg, b=4, max_len=16, per_slot=True,
+                              stacked=lm.can_stack_layers(cfg))
+    dst = jax.tree_util.tree_map(lambda x: x + 1 if x.dtype != bool
+                                 else x, src)
+    idx = jnp.asarray([0, 2], jnp.int32)
+    merged = slot_ops.merge_slots(dst, src, idx)
+    ref = slot_ops.write_slots(dst, slot_ops.read_slots(src, idx), idx)
+    for (pa, a), (_, b) in zip(
+            jax.tree_util.tree_flatten_with_path(merged)[0],
+            jax.tree_util.tree_flatten_with_path(ref)[0]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=str(pa))
+
+
+def test_pack_buffer_double_buffers():
+    """Consecutive packs land in DIFFERENT backing buffers (the view
+    handed out for chunk N survives packing chunk N+1) and rows are
+    zero-padded to l_pad."""
+    pb = slot_ops.PackBuffer(max_rows=3, max_chunk=8)
+    a = pb.pack([[1, 2, 3], [4]], 4)
+    a_copy = a.copy()
+    b = pb.pack([[9, 9, 9, 9]], 4)
+    np.testing.assert_array_equal(a, a_copy)      # untouched by pack #2
+    np.testing.assert_array_equal(a, [[1, 2, 3, 0], [4, 0, 0, 0]])
+    np.testing.assert_array_equal(b, [[9, 9, 9, 9]])
+    c = pb.pack([[7, 8]], 2)                      # reuses buffer of `a`
+    assert c.base is a.base
+    np.testing.assert_array_equal(b, [[9, 9, 9, 9]])
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded pool (multidevice CI job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (multidevice CI job)")
+def test_overlap_mesh_sharded_pool():
+    """Overlapped scheduler over a mesh-sharded slot pool: the deferred
+    merge_slots commit and the token-feed scatter must preserve stream
+    equality with the unsharded sequential engine."""
+    from repro.launch.mesh import make_local_mesh
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    mesh = make_local_mesh(2, 1)
+    seq, _ = _run(params, cfg, _storm(cfg.vocab, n=6, seed=6),
+                  overlap=False, slots=4)
+    ovl, eng = _run(params, cfg, _storm(cfg.vocab, n=6, seed=6),
+                    overlap=True, slots=4, mesh=mesh)
+    for uid in seq:
+        assert seq[uid] == ovl[uid], uid
+    assert eng.stats["overlap"] is True
