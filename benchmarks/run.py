@@ -16,6 +16,7 @@ first; this repo ships the cached results).
   lr_stability     Fig 5: loss spikes across LR sweep (perf - dark)
   attn_scaling     Fig 1: exact vs linear attention wall time
   serve_latency    O(1)-state decode vs KV decode across context lengths
+  serve_faults     kernel-ladder stream equality + health probe + recovery
   decode_hotpath   fused decode megakernel vs two-kernel vs jnp per-token
   prefill_hotpath  fused prefill megakernel vs two-stage vs jnp per-chunk
   roofline_*       §Roofline: worst train-cell roofline fraction
@@ -33,7 +34,8 @@ BENCHES = ("variance", "approx_error", "kernel_fidelity",
            "pretrain_curves",
            "finetune_curves", "finetune_long", "finetune_limited",
            "lr_stability", "attn_scaling", "serve_latency",
-           "decode_hotpath", "prefill_hotpath", "roofline")
+           "serve_faults", "decode_hotpath", "prefill_hotpath",
+           "roofline")
 
 
 def main() -> None:

@@ -1,0 +1,342 @@
+"""Serving fault-tolerance benchmark: kernel ladder, health probe,
+straggler-detect + quarantine recovery.
+
+Part 1 (ladder): the SAME greedy batch drained through the serving
+engine at every rung of the decode implementation ladder —
+``fused_kernel`` (the prf_fused_* megakernels against the
+engine-precomposed projections, ``cfg.use_kernel``), ``two_stage_kernel``
+(the legacy jnp-featmap + carry-scan-kernel oracle, reachable only via
+the lm-level ``fused=False`` entry points, which the rung pins for the
+engine's jitted steps), and ``jnp`` (pure-XLA reference). The tracked
+claim is ``streams_match``: all three rungs emit bitwise-identical
+greedy token streams, so a fleet can fall DOWN the ladder (kernel
+regression, new backend) without changing served outputs.
+
+Part 2 (health probe): the drain repeated with a per-step
+``StragglerMonitor`` (repro/runtime/fault_tolerance.py) latency EMA plus
+a periodic all-finite sweep over the live slot pool — the serving
+analogue of the trainer's health loop. The tracked claim is that the
+probe is ~free (``health_overhead`` ~1x wall), so there is no excuse to
+serve blind.
+
+Part 3 (recovery): a straggler fault injected mid-decode (one engine
+step artificially stalled); the monitor flags it in ``detect_steps``
+steps, the victim request is quarantined (``ServingEngine.cancel`` —
+its in-flight work is dropped), and the drain completes. The tracked
+claim is ``survivors_bitwise_identical``: the surviving slots' token
+streams equal the fault-free reference run — per-slot state isolation
+means one bad sequence never perturbs its neighbours.
+
+Tracked snapshot: experiments/bench/BENCH_serve_faults.json
+(schema-validated on write and by the CI bench-smoke job).
+"""
+from __future__ import annotations
+
+import argparse
+import contextlib
+import dataclasses
+import functools
+import sys
+import time
+from unittest import mock
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs as cfgs
+from repro.models import lm
+from repro.runtime.fault_tolerance import StragglerMonitor
+from repro.serving import Request, ServingEngine
+from benchmarks.common import load_result, save_result
+
+SCHEMA_VERSION = 1
+
+LADDER_RUNGS = ("fused_kernel", "two_stage_kernel", "jnp")
+LADDER_KEYS = ("tok_per_s", "tpot_p50_ms", "tpot_p99_ms", "wall_ms")
+
+
+def _prompts(vocab, n_req):
+    import random
+    rng = random.Random(0)
+    return [[rng.randrange(vocab) for _ in range(rng.randint(12, 24))]
+            for _ in range(n_req)]
+
+
+def _drain(eng, prompts, gen):
+    """Submit the batch, drain, return (per-request results in submit
+    order, wall seconds)."""
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+            for p in prompts]
+    t0 = time.perf_counter()
+    res = {r.uid: r for r in eng.run()}
+    wall = time.perf_counter() - t0
+    return [res[u] for u in uids], wall
+
+
+def _two_stage_ctx():
+    """Pin the lm-level serve entry points to ``fused=False`` (the
+    two-stage oracle) for the lifetime of a rung: the engine's jitted
+    steps trace through ``lm.decode_step`` / ``lm.prefill_chunk`` on
+    first call, and the engine itself only ever selects the fused or
+    pure-jnp paths (engine._resolve_serve_paths)."""
+    dec, pre = lm.decode_step, lm.prefill_chunk
+    return mock.patch.multiple(
+        lm,
+        decode_step=functools.partial(dec, fused=False),
+        prefill_chunk=functools.partial(pre, fused=False))
+
+
+def _make_engine(params, cfg, rung, slots, chunk_tokens):
+    kcfg = dataclasses.replace(cfg, use_kernel=(rung != "jnp"))
+    return ServingEngine(params, kcfg, max_slots=slots, max_len=96,
+                         chunk_tokens=chunk_tokens, seed=0)
+
+
+def run_ladder(params, cfg, *, n_req, gen, slots, chunk_tokens) -> dict:
+    """Drain the same greedy batch at every rung; bitwise-compare the
+    emitted streams."""
+    prompts = _prompts(cfg.vocab, n_req)
+    out, streams = {}, {}
+    for rung in LADDER_RUNGS:
+        ctx = _two_stage_ctx() if rung == "two_stage_kernel" else \
+            contextlib.nullcontext()
+        with ctx:
+            eng = _make_engine(params, cfg, rung, slots, chunk_tokens)
+            _drain(eng, prompts, gen)          # compile warmup
+            results, wall = _drain(eng, prompts, gen)
+        streams[rung] = [tuple(r.tokens) for r in results]
+        tpots = np.array([t for r in results for t in r.tpots])
+        n_tok = sum(len(r.tokens) for r in results)
+        out[rung] = {
+            "tok_per_s": n_tok / max(wall, 1e-9),
+            "tpot_p50_ms": float(np.percentile(tpots, 50) * 1e3),
+            "tpot_p99_ms": float(np.percentile(tpots, 99) * 1e3),
+            "wall_ms": wall * 1e3,
+        }
+        print(f"  ladder[{rung}]: {out[rung]['tok_per_s']:.0f} tok/s, "
+              f"tpot p50={out[rung]['tpot_p50_ms']:.2f}ms, "
+              f"wall={out[rung]['wall_ms']:.0f}ms", flush=True)
+    out["streams_match"] = bool(
+        all(streams[r] == streams[LADDER_RUNGS[0]] for r in LADDER_RUNGS))
+    print(f"  ladder streams_match={out['streams_match']}", flush=True)
+    return out
+
+
+@functools.partial(jax.jit, static_argnums=())
+def _tree_finite(tree):
+    """ONE fused all-finite reduction over the floating leaves (a
+    per-leaf host sync would dominate the probe's cost)."""
+    flags = [jnp.isfinite(leaf).all()
+             for leaf in jax.tree_util.tree_leaves(tree)
+             if jnp.issubdtype(leaf.dtype, jnp.floating)]
+    return jnp.stack(flags).all()
+
+
+def _pool_finite(eng) -> bool:
+    return bool(_tree_finite(eng.pool))
+
+
+def run_health_probe(eng, prompts, gen, probe_every: int = 4) -> dict:
+    """Wall time of the drain with vs without the per-step monitor +
+    periodic pool-finiteness sweep. Same warm engine both passes."""
+    _, off = _drain(eng, prompts, gen)
+    _pool_finite(eng)                          # compile the probe
+    mon = StragglerMonitor(threshold=3.0, warmup_steps=4)
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+            for p in prompts]
+    t0 = time.perf_counter()
+    i = 0
+    while eng.has_work:
+        s0 = time.perf_counter()
+        eng.step()
+        mon.record(i, time.perf_counter() - s0)
+        if probe_every and i % probe_every == probe_every - 1:
+            if not _pool_finite(eng):
+                raise SystemExit("health probe: non-finite slot state")
+        i += 1
+    on = time.perf_counter() - t0
+    del uids
+    row = {"health_on": on * 1e3, "health_off": off * 1e3,
+           "health_overhead": on / max(off, 1e-9)}
+    print(f"  health probe: {row['health_overhead']:.2f}x wall overhead "
+          f"({mon.straggler_steps} stragglers flagged in steady state)",
+          flush=True)
+    return row
+
+
+def run_recovery(eng, prompts, gen, stall_at: int = 6) -> dict:
+    """Inject one stalled engine step mid-decode; the StragglerMonitor
+    detects it, the victim request is quarantined via ``cancel`` (its
+    in-flight work dropped), and the survivors must finish with token
+    streams bitwise-equal to a fault-free reference drain."""
+    refs, _ = _drain(eng, prompts, gen)        # fault-free reference
+    mon = StragglerMonitor(threshold=3.0, warmup_steps=4)
+    uids = [eng.submit(Request(prompt=p, max_new_tokens=gen))
+            for p in prompts]
+    victim, detect_steps, quarantined = uids[0], 0, 0
+    i, finished = 0, []
+    while eng.has_work:
+        s0 = time.perf_counter()
+        finished.extend(eng.step())
+        dt = time.perf_counter() - s0
+        if i == stall_at:                      # the fault: one stalled
+            time.sleep(0.05)                   # step (dead host, link
+            dt = time.perf_counter() - s0      # flap) lands in the EMA
+        flagged = mon.record(i, dt)
+        if i >= stall_at and not quarantined:
+            detect_steps += 1
+            if flagged:                        # detector fired: evict
+                eng.cancel(victim)             # the straggling sequence
+                quarantined = 1
+        i += 1
+    res = {r.uid: r for r in finished}
+    survivors = [(j, u) for j, u in enumerate(uids) if u != victim]
+    survivors_ok = all(
+        u in res and tuple(res[u].tokens) == tuple(refs[j].tokens)
+        for j, u in survivors)
+    row = {"detect_steps": detect_steps, "quarantined": quarantined,
+           "failed": 1,
+           "survivors_bitwise_identical": bool(survivors_ok)}
+    print(f"  recovery: detected in {detect_steps} step(s), "
+          f"survivors bitwise identical={row['survivors_bitwise_identical']}",
+          flush=True)
+    return row
+
+
+def validate(payload: dict, require_win: bool = True) -> list[str]:
+    """Schema check for the BENCH_serve_faults snapshot. Returns a list
+    of problems (empty == valid). ``require_win`` also enforces the
+    correctness bars — cross-rung stream equality and bitwise-identical
+    survivors — on for tracked snapshots, off for CI smoke machines
+    where only the schema is the contract (the bars themselves are not
+    timing-noise-sensitive, but smoke runs may shrink the traffic below
+    what makes them meaningful)."""
+    errs = []
+    if payload.get("schema_version") != SCHEMA_VERSION:
+        errs.append(f"schema_version != {SCHEMA_VERSION}")
+    meth = payload.get("methodology", {})
+    for key in ("backend", "timing", "traffic"):
+        if not isinstance(meth.get(key), str):
+            errs.append(f"methodology.{key} missing")
+    ladder = payload.get("ladder")
+    if not isinstance(ladder, dict):
+        errs.append("ladder: missing")
+    else:
+        for rung in LADDER_RUNGS:
+            row = ladder.get(rung)
+            if not isinstance(row, dict):
+                errs.append(f"ladder.{rung}: missing")
+                continue
+            for key in LADDER_KEYS:
+                if not isinstance(row.get(key), (int, float)):
+                    errs.append(f"ladder.{rung}: lacks numeric {key!r}")
+        if not isinstance(ladder.get("streams_match"), bool):
+            errs.append("ladder.streams_match missing")
+    hp = payload.get("health_probe")
+    if not isinstance(hp, dict):
+        errs.append("health_probe: missing")
+    else:
+        for key in ("health_on", "health_off", "health_overhead"):
+            if not isinstance(hp.get(key), (int, float)):
+                errs.append(f"health_probe: lacks numeric {key!r}")
+    rec = payload.get("recovery")
+    if not isinstance(rec, dict):
+        errs.append("recovery: missing")
+    else:
+        for key in ("detect_steps", "quarantined", "failed"):
+            if not isinstance(rec.get(key), int):
+                errs.append(f"recovery: lacks integer {key!r}")
+        if not isinstance(rec.get("survivors_bitwise_identical"), bool):
+            errs.append("recovery.survivors_bitwise_identical missing")
+    if require_win and not errs:
+        if not ladder["streams_match"]:
+            errs.append("kernel-ladder greedy streams must be bitwise "
+                        "identical across rungs")
+        if not rec["survivors_bitwise_identical"]:
+            errs.append("survivors of a quarantined sequence must match "
+                        "the fault-free reference bitwise")
+        if not rec["quarantined"]:
+            errs.append("the injected straggler was never quarantined")
+    return errs
+
+
+def run(fast: bool = True, slots: int = 3, chunk_tokens: int = 16,
+        smoke: bool = False) -> dict:
+    if smoke:
+        n_req, gen = 3, 6
+    else:
+        n_req, gen = (6, 16) if fast else (12, 32)
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    cfg = cfgs.darkify(cfg, "darkformer", cfg.attn.num_features)
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    out = {
+        "schema_version": SCHEMA_VERSION,
+        "methodology": {
+            "backend": jax.default_backend(),
+            "timing": "wall time of full drain (submit -> flush) on a "
+                      "warm engine; compile warmup pass excluded",
+            "traffic": f"greedy batch of {n_req} (prompts 12-24, "
+                       f"gen {gen}), darkformer reduced smollm-135m, "
+                       f"{slots} slots, chunk_tokens={chunk_tokens}",
+            "note": "CPU numbers — the tracked claims are the "
+                    "cross-rung stream equality, the ~1x health-probe "
+                    "overhead and the recovery guarantees, not "
+                    "absolute ms",
+        },
+        "ladder": run_ladder(params, cfg, n_req=n_req, gen=gen,
+                             slots=slots, chunk_tokens=chunk_tokens),
+    }
+    prompts = _prompts(cfg.vocab, n_req)
+    eng = _make_engine(params, cfg, "jnp", slots, chunk_tokens)
+    _drain(eng, prompts, gen)                  # compile warmup
+    out["health_probe"] = run_health_probe(eng, prompts, gen)
+    out["recovery"] = run_recovery(eng, prompts, gen)
+    out["us_per_call"] = out["ladder"]["fused_kernel"]["tpot_p50_ms"] * 1e3
+    out["derived"] = out["health_probe"]["health_overhead"]
+    errs = validate(out, require_win=not smoke)
+    if errs:
+        raise SystemExit("BENCH_serve_faults invalid: " + "; ".join(errs))
+    if not smoke:
+        path = save_result("BENCH_serve_faults", out)
+        print(f"wrote {path}")
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny run + schema check (CI bench-smoke; no "
+                         "snapshot written)")
+    ap.add_argument("--full", action="store_true",
+                    help="more requests / longer generations")
+    ap.add_argument("--validate", action="store_true",
+                    help="only validate the committed BENCH_serve_faults "
+                         "snapshot's schema + correctness bars")
+    args = ap.parse_args()
+    if args.validate:
+        payload = load_result("BENCH_serve_faults")
+        if payload is None:
+            raise SystemExit("no BENCH_serve_faults.json snapshot "
+                             "to validate")
+        errs = validate(payload)
+        if errs:
+            raise SystemExit("invalid snapshot: " + "; ".join(errs))
+        print("BENCH_serve_faults.json schema OK (streams_match="
+              f"{payload['ladder']['streams_match']}, health overhead "
+              f"{payload['health_probe']['health_overhead']:.2f}x, "
+              "survivors bitwise="
+              f"{payload['recovery']['survivors_bitwise_identical']})")
+        return
+    if args.smoke:
+        run(smoke=True)
+        print("serve_faults bench smoke OK")
+        return
+    r = run(fast=not args.full)
+    print("health overhead: "
+          f"{r['health_probe']['health_overhead']:.2f}x, streams_match: "
+          f"{r['ladder']['streams_match']}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

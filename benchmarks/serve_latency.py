@@ -30,6 +30,21 @@ increase in per-step stall. Reports burst wall time, last-admission
 TTFT and the prefill call/batch stats for both (tracked snapshot:
 experiments/bench/BENCH_serve_batched.json).
 
+Part 6 (prefix cache): prefix-heavy traffic — >= 80% of requests share
+one long prompt prefix (the system-prompt / few-shot template shape) —
+through the engine with and without ``prefix_cache``. With the cache,
+the first request's chunked prefill captures block-aligned snapshots
+and every later sharer is admitted by FORKING the snapshot (one
+broadcast scatter; cursor starts at the cached length), so only its
+private suffix is prefilled; exact configs run the same traffic on the
+paged-KV layout where forks share prefix pages copy-on-write. Reports
+TTFT p50/p99, prefill tokens actually computed, and the cache's
+hit/fork/eviction counters for both modes and both kinds. Acceptance
+bar: cache-on TTFT p50 at least 2x better than cache-off at this reuse
+level for the PRF kind (tracked snapshot:
+experiments/bench/BENCH_serve_prefix.json, schema-validated on write
+and by the CI bench-smoke job).
+
 Part 5 (overlapped serving): the sequential vs pipelined step loop
 (``ServingEngine(overlap=...)``) under a Poisson admission storm at
 MATCHED traffic — same request trace, same slots/chunk budget. The
@@ -58,17 +73,22 @@ import numpy as np
 
 from repro import configs as cfgs
 from repro.models import lm
-from repro.serving import Request, ServingEngine
+from repro.serving import PrefixCacheConfig, Request, ServingEngine
 from repro.serving.request import synthetic_requests
 from benchmarks.common import load_result, save_result, time_call
 
 SCHEMA_VERSION = 1
+PREFIX_SCHEMA_VERSION = 1
 
 # every per-scheduler row of the overlap benchmark must carry these
 REQUIRED_MODE_KEYS = ("tok_per_s", "tpot_p50_ms", "tpot_p99_ms",
                       "ttft_p50_ms", "ttft_p99_ms",
                       "decode_stall_ms_p50", "decode_stall_ms_p99",
                       "decode_stall_ms_max", "dispatch_depth_mean")
+
+# every cache_off/cache_on row of the prefix-cache benchmark
+PREFIX_MODE_KEYS = ("tok_per_s", "ttft_p50_ms", "ttft_p99_ms",
+                    "prefill_tokens")
 
 
 def run_context_scaling(fast: bool = True) -> dict:
@@ -407,6 +427,205 @@ def run_overlapped_serving(fast: bool = True, slots: int = 4,
     return out
 
 
+def _prefix_pass(eng, vocab, prefix, *, seed, n_req, rate, reuse,
+                 suffix_range=(16, 31), gen_range=(8, 16)):
+    """One prefix-heavy storm against a warm engine: a ``reuse``
+    fraction of requests open with the FIXED ``prefix`` (so snapshots
+    captured on earlier passes keep hitting), the rest are random
+    control prompts of the same length; arrivals are Poisson at
+    ``rate`` offset to the engine clock."""
+    import random
+    rng = random.Random(seed)
+    now, t, reqs = eng._now(), 0.0, []
+    for _ in range(n_req):
+        if rate > 0:
+            t += rng.expovariate(rate)
+        suffix = [rng.randrange(vocab)
+                  for _ in range(rng.randint(*suffix_range))]
+        if rng.random() < reuse:
+            prompt = list(prefix) + suffix
+        else:
+            prompt = [rng.randrange(vocab)
+                      for _ in range(len(prefix))] + suffix
+        reqs.append(Request(prompt=prompt,
+                            max_new_tokens=rng.randint(*gen_range),
+                            arrival_time=now + t))
+    for r in reqs:
+        eng.submit(r)
+    return eng.run(realtime=False)
+
+
+def run_prefix_cache(fast: bool = True, slots: int = 4,
+                     chunk_tokens: int = 32, prefix_len: int = 128,
+                     reuse: float = 0.85, rate: float = 16.0,
+                     smoke: bool = False) -> dict:
+    """Prefix-heavy traffic with vs without the prefix cache (module
+    docstring, part 6), for the PRF kind (snapshot fork) and the exact
+    kind (paged KV, copy-on-write fork). Writes + validates the
+    tracked BENCH_serve_prefix.json snapshot (skipped under
+    ``smoke``, which only checks the schema on a tiny run)."""
+    if smoke:
+        n_req, reps, prefix_len, chunk_tokens, slots = 4, 1, 32, 16, 2
+        max_len, block = 96, 16
+    else:
+        n_req = 12 if fast else 32
+        reps = 2 if fast else 4
+        max_len, block = 192, 32
+    pc = PrefixCacheConfig(block_tokens=block, page_size=16)
+    out = {
+        "schema_version": PREFIX_SCHEMA_VERSION,
+        "methodology": {
+            "backend": jax.default_backend(),
+            "timing": "token-readiness clocks; warmup storm (compile + "
+                      "prefix capture) excluded from every percentile, "
+                      f"{reps} measured storms on the warm engine",
+            "traffic": f"{n_req} requests/storm, Poisson rate={rate}/s, "
+                       f"shared prefix={prefix_len} tokens at "
+                       f"reuse={reuse:.0%}, suffixes 16-31, gen 8-16, "
+                       f"{slots} slots, chunk_tokens={chunk_tokens}, "
+                       f"block_tokens={block}",
+            "note": "CPU numbers — the tracked claim is the cache-on "
+                    "vs cache-off TTFT ordering at this reuse level, "
+                    "not absolute ms",
+        },
+        "reuse": reuse,
+        "prefix_len": prefix_len,
+        "kinds": {},
+    }
+    import random
+    for kind in ("darkformer", "exact"):
+        cfg = cfgs.get_config("smollm-135m", reduced=True)
+        cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
+        params = lm.init_params(jax.random.PRNGKey(0), cfg)
+        # the shared prefix is FIXED (not derived from the storm seed)
+        # so the warmup pass's captured snapshots serve every later pass
+        prng = random.Random(42)
+        prefix = [prng.randrange(cfg.vocab) for _ in range(prefix_len)]
+        krow = {}
+        for mode, cache in (("cache_off", None), ("cache_on", pc)):
+            eng = ServingEngine(params, cfg, max_slots=slots,
+                                max_len=max_len, seed=0,
+                                chunk_tokens=chunk_tokens,
+                                prefix_cache=cache)
+            # warmup compiles the trace's packed-prefill shapes (two
+            # full-size storms — one is not enough combination
+            # coverage) and, cache-on, captures the shared prefix's
+            # block-aligned snapshots
+            for wseed in (5, 6):
+                _prefix_pass(eng, cfg.vocab, prefix, seed=wseed,
+                             rate=rate, n_req=n_req, reuse=reuse)
+            base_prefill = eng.stats["prefill_tokens"]
+            ttfts, results = [], []
+            for rep in range(reps):
+                res = _prefix_pass(eng, cfg.vocab, prefix,
+                                   seed=21 + rep, n_req=n_req,
+                                   rate=rate, reuse=reuse)
+                results += res
+                ttfts += [r.ttft for r in res if r.token_times]
+            st = eng.stats
+            span = (max(r.finish_time for r in results)
+                    - min(r.arrival_time for r in results))
+            row = {
+                "tok_per_s": sum(len(r.tokens) for r in results)
+                / max(span, 1e-9),
+                "ttft_p50_ms": float(np.percentile(ttfts, 50) * 1e3),
+                "ttft_p99_ms": float(np.percentile(ttfts, 99) * 1e3),
+                # prefill actually computed in the measured storms —
+                # forked admissions skip the cached prefix entirely
+                "prefill_tokens": st["prefill_tokens"] - base_prefill,
+            }
+            if cache is not None:
+                row.update({
+                    "prefix_hit_rate": st["prefix_hit_rate"],
+                    "forked_requests": st["forked_requests"],
+                    "forked_tokens": st["forked_tokens"],
+                    "prefix_captures": st["prefix_captures"],
+                    "prefix_evictions": st["prefix_evictions"],
+                    "snapshot_device_bytes": st["prefix_device_bytes"],
+                    "paged_kv": bool(st.get("paged_kv", False)),
+                })
+                if st.get("paged_kv"):
+                    row["kv_pages_free"] = st["kv_pages_free"]
+                    row["kv_pages_total"] = st["kv_pages_total"]
+            krow[mode] = row
+            extra = (f", hits={st['prefix_hits']} "
+                     f"forked={st['forked_tokens']} tok"
+                     if cache is not None else "")
+            print(f"  prefix[{kind}/{mode}]: "
+                  f"ttft p50={row['ttft_p50_ms']:.0f}ms "
+                  f"p99={row['ttft_p99_ms']:.0f}ms, "
+                  f"prefill={row['prefill_tokens']} tok{extra}",
+                  flush=True)
+        krow["ttft_p50_improvement"] = (
+            krow["cache_off"]["ttft_p50_ms"]
+            / max(krow["cache_on"]["ttft_p50_ms"], 1e-9))
+        krow["prefill_token_reduction"] = (
+            krow["cache_off"]["prefill_tokens"]
+            / max(krow["cache_on"]["prefill_tokens"], 1))
+        out["kinds"][kind] = krow
+        print(f"  prefix[{kind}]: ttft p50 improvement "
+              f"{krow['ttft_p50_improvement']:.2f}x, prefill tokens "
+              f"{krow['prefill_token_reduction']:.2f}x fewer", flush=True)
+    errs = validate_prefix(out, require_win=not smoke)
+    if errs:
+        raise SystemExit("BENCH_serve_prefix invalid: " + "; ".join(errs))
+    if not smoke:
+        path = save_result("BENCH_serve_prefix", out)
+        print(f"wrote {path}")
+    return out
+
+
+def validate_prefix(payload: dict, require_win: bool = True) -> list[str]:
+    """Schema check for the BENCH_serve_prefix snapshot. Returns a
+    list of problems (empty == valid). ``require_win`` also enforces
+    the ISSUE-10 acceptance bar — cache-on TTFT p50 at least 2x better
+    than cache-off at >= 80% prefix reuse for the PRF kind — on for
+    tracked snapshots, off for CI smoke machines where only the
+    schema is the contract."""
+    errs = []
+    if payload.get("schema_version") != PREFIX_SCHEMA_VERSION:
+        errs.append(f"schema_version != {PREFIX_SCHEMA_VERSION}")
+    meth = payload.get("methodology", {})
+    for key in ("backend", "timing", "traffic"):
+        if not isinstance(meth.get(key), str):
+            errs.append(f"methodology.{key} missing")
+    kinds = payload.get("kinds", {})
+    for kind in ("darkformer", "exact"):
+        krow = kinds.get(kind)
+        if not isinstance(krow, dict):
+            errs.append(f"kinds.{kind}: missing")
+            continue
+        for mode in ("cache_off", "cache_on"):
+            row = krow.get(mode)
+            if not isinstance(row, dict):
+                errs.append(f"{kind}.{mode}: missing")
+                continue
+            for key in PREFIX_MODE_KEYS:
+                if not isinstance(row.get(key), (int, float)):
+                    errs.append(f"{kind}.{mode}: lacks numeric {key!r}")
+        on = krow.get("cache_on", {})
+        if isinstance(on, dict):
+            for key in ("prefix_hit_rate", "forked_tokens",
+                        "prefix_captures"):
+                if not isinstance(on.get(key), (int, float)):
+                    errs.append(f"{kind}.cache_on: lacks numeric {key!r}")
+        if not isinstance(krow.get("ttft_p50_improvement"), (int, float)):
+            errs.append(f"kinds.{kind}: lacks ttft_p50_improvement")
+    exact_on = kinds.get("exact", {}).get("cache_on", {})
+    if isinstance(exact_on, dict) and exact_on and \
+            not exact_on.get("paged_kv"):
+        errs.append("exact.cache_on must run the paged-KV layout "
+                    "(paged_kv: true)")
+    if require_win and not errs:
+        imp = payload["kinds"]["darkformer"]["ttft_p50_improvement"]
+        if imp < 2.0:
+            errs.append(
+                "prefix cache must improve TTFT p50 by >= 2x at this "
+                "reuse level for the PRF kind (acceptance bar of "
+                f"ISSUE 10); got {imp:.2f}x")
+    return errs
+
+
 def validate(payload: dict, require_win: bool = True) -> list[str]:
     """Schema check for the BENCH_serve_overlap snapshot. Returns a
     list of problems (empty == valid). ``require_win`` also enforces
@@ -453,8 +672,10 @@ def run(fast: bool = True) -> dict:
     chunked = run_chunked_prefill(fast)
     batched = run_batched_prefill(fast)
     overlap = run_overlapped_serving(fast)
+    prefix = run_prefix_cache(fast)
     out = {**scaling, "traffic": traffic, "chunked_prefill": chunked,
-           "batched_prefill": batched, "overlapped_serving": overlap}
+           "batched_prefill": batched, "overlapped_serving": overlap,
+           "prefix_cache": prefix}
     save_result("serve_latency", out)
     return out
 
@@ -462,13 +683,15 @@ def run(fast: bool = True) -> dict:
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
-                    help="tiny overlap-section run + schema check "
-                         "(CI bench-smoke; no snapshot written)")
+                    help="tiny overlap- and prefix-section runs + "
+                         "schema checks (CI bench-smoke; no snapshot "
+                         "written)")
     ap.add_argument("--full", action="store_true",
                     help="more requests/repeats per section")
     ap.add_argument("--validate", action="store_true",
                     help="only validate the committed "
-                         "BENCH_serve_overlap snapshot's schema")
+                         "BENCH_serve_overlap and BENCH_serve_prefix "
+                         "snapshots' schemas")
     args = ap.parse_args()
     if args.validate:
         payload = load_result("BENCH_serve_overlap")
@@ -482,6 +705,18 @@ def main():
               f"{payload['tpot_p99_improvement']:.2f}x, stall p99 "
               f"{payload['overlap']['decode_stall_ms_p99']:.2f}ms < "
               f"chunk {payload['chunk_latency_ms']:.2f}ms)")
+        payload = load_result("BENCH_serve_prefix")
+        if payload is None:
+            raise SystemExit("no BENCH_serve_prefix.json snapshot "
+                             "to validate")
+        errs = validate_prefix(payload)
+        if errs:
+            raise SystemExit("invalid snapshot: " + "; ".join(errs))
+        dk = payload["kinds"]["darkformer"]
+        print("BENCH_serve_prefix.json schema OK (ttft p50 "
+              f"{dk['ttft_p50_improvement']:.2f}x, hit rate "
+              f"{dk['cache_on']['prefix_hit_rate']:.0%}, exact paged "
+              f"{payload['kinds']['exact']['ttft_p50_improvement']:.2f}x)")
         return
     if args.smoke:
         cfg = cfgs.get_config("smollm-135m", reduced=True)
@@ -522,6 +757,7 @@ def main():
         errs = validate(payload, require_win=False)
         if errs:
             raise SystemExit("smoke schema invalid: " + "; ".join(errs))
+        run_prefix_cache(smoke=True)      # validates its own schema
         print("serve_latency bench smoke OK")
         return
     r = run(fast=not args.full)
@@ -534,6 +770,9 @@ def main():
           f"{r['chunked_prefill']['stall_improvement']:.1f}x")
     print("overlap tpot-p99 improvement: "
           f"{r['overlapped_serving']['tpot_p99_improvement']:.2f}x")
+    for kind, krow in r["prefix_cache"]["kinds"].items():
+        print(f"prefix-cache ttft-p50 improvement [{kind}]: "
+              f"{krow['ttft_p50_improvement']:.2f}x")
 
 
 if __name__ == "__main__":

@@ -164,6 +164,13 @@ class AttnServeState(NamedTuple):
              int32 when the whole batch decodes in lock-step, or (B,)
              int32 for per-slot lengths (continuous batching: each slot
              owns one page of the cache and writes at its own index).
+    paged  — ``table`` set selects block-granular paging: ``kv_k`` /
+             ``kv_v`` become SHARED page pools (n_pages, page_size, G,
+             d) and ``table`` (B, max_pages) maps each row's logical
+             page j to a physical pool page (page 0 is the reserved
+             garbage page that masked/inactive writes land on). Rows
+             can then share physical prefix pages copy-on-write — the
+             prefix-cache fork path (repro/serving/prefix_cache.py).
     linear — running (S, z) plus the running k-stabilizer ``c``. All
              leaves carry a leading batch axis, so the state doubles as
              a slot pool: slot i lives at batch row i of every leaf.
@@ -174,6 +181,7 @@ class AttnServeState(NamedTuple):
     s: Optional[Array] = None               # (B, G, Hg, m, dv) f32
     z: Optional[Array] = None               # (B, G, Hg, m)     f32
     c: Optional[Array] = None               # (B, G, 1, 1, 1)   f32
+    table: Optional[Array] = None           # (B, max_pages)    int32
 
 
 def _exact_prefill_resume(qs, ks, v, state: AttnServeState,
@@ -240,6 +248,65 @@ def _exact_prefill_resume(qs, ks, v, state: AttnServeState,
     return out, state._replace(kv_k=kc, kv_v=vc, length=idx + adv)
 
 
+def _exact_paged_append_attend(qs, ks, v, state: AttnServeState,
+                               window: Optional[int], out_dtype,
+                               valid_len: Optional[Array] = None):
+    """Paged-KV generalization of :func:`_exact_prefill_resume`.
+
+    Token t of row b lands at flat pool position
+    ``table[b, (length[b]+t) // ps] * ps + (length[b]+t) % ps``; masked
+    (padded) positions are routed to the reserved garbage page 0, so a
+    ragged batched chunk leaves no trace outside each row's own pages.
+    Reads gather the row's whole table (max_pages * ps logical
+    positions, unused ones masked to -inf) and apply the same
+    prefix-masked softmax as the contiguous path — paged and contiguous
+    streams agree to f32 rounding under identical chunk schedules, and
+    paged-vs-paged is bitwise (only the physical page ids differ, which
+    the gather erases). Decode is the l=1 case.
+
+    Because rows only ever append at their own length, a physical page
+    that is FULLY covered by some row's committed prefix is append-only
+    immutable — which is what lets the prefix cache share prefix pages
+    across forked rows and copy only the partial tail page
+    (copy-on-write at fork, repro/serving/prefix_cache.py).
+    """
+    b, g, hg, l, dh = qs.shape
+    npg, ps, gk, dhk = state.kv_k.shape
+    mp = state.table.shape[1]
+    idx = state.length                                   # (B,)
+    pos = idx[:, None] + jnp.arange(l)[None]             # (B, l) absolute
+    logical = jnp.minimum(pos // ps, mp - 1)
+    phys = jnp.take_along_axis(state.table, logical, axis=1)
+    flat = phys * ps + pos % ps                          # (B, l) pool pos
+    if valid_len is not None:
+        keep = jnp.arange(l)[None] < valid_len[:, None]
+        flat = jnp.where(keep, flat, 0)                  # garbage page 0
+    kf = state.kv_k.reshape(npg * ps, gk, dhk)
+    vf = state.kv_v.reshape(npg * ps, gk, dhk)
+    knew = jnp.moveaxis(ks[:, :, 0], 1, 2).reshape(b * l, gk, dhk)
+    vnew = jnp.moveaxis(v[:, :, 0], 1, 2).reshape(b * l, gk, -1)
+    kf = kf.at[flat.reshape(-1)].set(knew.astype(kf.dtype))
+    vf = vf.at[flat.reshape(-1)].set(vnew.astype(vf.dtype))
+    # gather each row's paged prefix back as a logically-contiguous view
+    gidx = (state.table[:, :, None] * ps
+            + jnp.arange(ps)[None, None]).reshape(b, mp * ps)
+    kc = jnp.moveaxis(kf[gidx], 1, 2)                    # (B, G, Lc, dh)
+    vc = jnp.moveaxis(vf[gidx], 1, 2)
+    kpos = jnp.arange(mp * ps)
+    valid = kpos[None, None, :] <= pos[:, :, None]       # (B, l, Lc)
+    if window is not None:
+        valid &= kpos[None, None, :] > pos[:, :, None] - window
+    vmask = valid[:, None, None]                         # (B,1,1,l,Lc)
+    logits = jnp.einsum("bghqd,bgkd->bghqk", qs, kc).astype(jnp.float32)
+    logits = jnp.where(vmask, logits, jnp.finfo(jnp.float32).min)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bghqk,bgkd->bghqd", probs, vc).astype(out_dtype)
+    adv = l if valid_len is None else valid_len
+    return out, state._replace(kv_k=kf.reshape(npg, ps, gk, dhk),
+                               kv_v=vf.reshape(npg, ps, gk, dhk),
+                               length=idx + adv)
+
+
 def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
                          window: Optional[int] = None, chunk: int = 256,
                          max_len: Optional[int] = None,
@@ -283,6 +350,10 @@ def rf_attention_prefill(q, k, v, fparams, cfg: fm.FeatureConfig, *,
     if cfg.kind == "exact":
         qs, ks = _scale_qk(q, k)
         if state is not None:
+            if state.table is not None:
+                return _exact_paged_append_attend(qs, ks, v, state, window,
+                                                  v.dtype,
+                                                  valid_len=valid_len)
             return _exact_prefill_resume(qs, ks, v, state, window, v.dtype,
                                          valid_len=valid_len)
         out = la.exact_attention(qs, ks, v, causal=True, window=window)
@@ -380,6 +451,9 @@ def rf_attention_decode(q, k, v, state: AttnServeState, fparams,
     dv = v.shape[-1]
     if cfg.kind == "exact":
         qs, ks = _scale_qk(q, k)
+        if state.table is not None:
+            return _exact_paged_append_attend(qs, ks, v, state, window,
+                                              v.dtype)
         return _exact_decode(qs, ks, v, state, window, v.dtype)
 
     qs, ks = _scale_qk(q, k)

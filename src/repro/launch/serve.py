@@ -16,6 +16,10 @@ Examples:
   # Poisson open-loop traffic at 2 req/s
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
       --requests 16 --slots 4 --rate 2.0
+
+  # prefix-heavy traffic: fork the shared 96-token prompt from the cache
+  PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --reduced \
+      --requests 16 --chunk-tokens 32 --prefix-cache --shared-prefix 96
 """
 from __future__ import annotations
 
@@ -28,8 +32,9 @@ import numpy as np
 from repro import configs as cfgs
 from repro.models import lm
 from repro.parallel import param_specs, make_shardings
-from repro.serving import ServingEngine
-from repro.serving.request import synthetic_requests
+from repro.serving import PrefixCacheConfig, ServingEngine
+from repro.serving.request import shared_prefix_requests, \
+    synthetic_requests
 from repro import checkpoint as ckpt_lib
 from repro.launch import mesh as mesh_lib
 
@@ -84,6 +89,28 @@ def main():
                          "with engine-precomposed projections); PRF kinds "
                          "only — warns and is ignored for --kernel exact, "
                          "whose softmax decode has no Pallas path")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="capture prefix snapshots at block boundaries "
+                         "and admit later requests sharing a cached "
+                         "prefix by forking its state (O(1) for PRF "
+                         "kinds; exact switches to paged KV with "
+                         "copy-on-write page sharing)")
+    ap.add_argument("--prefix-block", type=int, default=16,
+                    help="prefix-cache capture/match granularity in "
+                         "tokens (align with --chunk-tokens grants)")
+    ap.add_argument("--prefix-device-mb", type=int, default=64,
+                    help="device-tier snapshot budget (MiB) before LRU "
+                         "demotion to host")
+    ap.add_argument("--prefix-host-mb", type=int, default=256,
+                    help="host-tier snapshot budget (MiB) before LRU "
+                         "eviction")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="exact paged-KV page size in tokens "
+                         "(prefix-cache engines only)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="generate prefix-heavy traffic: N-token shared "
+                         "prompt prefix on ~80%% of requests (0 = fully "
+                         "random prompts)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0,
                     help="per-request top-k sampling (0 = off)")
@@ -129,18 +156,33 @@ def main():
     # device_put per serve_state_specs and constrained inside the jitted
     # steps); a 1x1 mesh keeps the single-device fast path
     pool_mesh = mesh if args.mesh_data * args.mesh_model > 1 else None
+    pc = None
+    if args.prefix_cache:
+        pc = PrefixCacheConfig(block_tokens=args.prefix_block,
+                               device_bytes=args.prefix_device_mb << 20,
+                               host_bytes=args.prefix_host_mb << 20,
+                               page_size=args.page_size)
     engine = ServingEngine(params, cfg, max_slots=args.slots,
                            max_len=args.max_len,
                            chunk_tokens=args.chunk_tokens,
                            seed=args.seed, mesh=pool_mesh,
                            prefill_rows=args.prefill_rows,
                            bucket_prefill=not args.no_bucket_prefill,
-                           overlap=args.overlap)
-    reqs = synthetic_requests(
-        args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
-        prompt_range=_parse_range(args.prompt_len),
-        gen_range=_parse_range(args.gen), temperature=args.temperature,
-        top_k=args.top_k, top_p=args.top_p)
+                           overlap=args.overlap, prefix_cache=pc)
+    if args.shared_prefix > 0:
+        reqs = shared_prefix_requests(
+            args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
+            prefix_len=args.shared_prefix,
+            suffix_range=_parse_range(args.prompt_len),
+            gen_range=_parse_range(args.gen),
+            temperature=args.temperature)
+    else:
+        reqs = synthetic_requests(
+            args.requests, cfg.vocab, seed=args.seed, rate=args.rate,
+            prompt_range=_parse_range(args.prompt_len),
+            gen_range=_parse_range(args.gen),
+            temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p)
     try:
         for r in reqs:
             engine.submit(r)
@@ -182,6 +224,21 @@ def main():
     if "ttft_p50" in st:
         print(f"ttft: p50={st['ttft_p50'] * 1e3:.0f}ms "
               f"p99={st['ttft_p99'] * 1e3:.0f}ms")
+    if "prefix_hits" in st:
+        line = (f"prefix cache: hit rate "
+                f"{st['prefix_hit_rate'] * 100:.0f}% "
+                f"({st['prefix_hits']}/{st['prefix_hits'] + st['prefix_misses']}), "
+                f"{st['forked_tokens']} prompt tokens forked over "
+                f"{st['forked_requests']} requests; "
+                f"{st['prefix_entries']} entries "
+                f"({st['prefix_device_bytes'] >> 10}KiB dev / "
+                f"{st['prefix_host_bytes'] >> 10}KiB host), "
+                f"{st['prefix_evictions']} evictions")
+        if st.get("paged_kv"):
+            line += (f"; paged KV: {st['kv_pages_total']} pages x "
+                     f"{st['kv_page_size']} tok, "
+                     f"{st['kv_pages_free']} free")
+        print(line)
     print(f"slot occupancy: {st['mean_occupancy'] * 100:.0f}% over "
           f"{st['decode_steps']} decode steps")
     print(f"prefill: {st['prefill_tokens']} tokens in "

@@ -154,3 +154,15 @@ def init_attn_serve_state(cfg: fm.FeatureConfig, b, n_heads, n_kv, d_head,
             length=jnp.zeros((b,) if per_slot else (), jnp.int32))
     return rfa.init_linear_serve_state(b, n_kv, hg, cfg.num_features,
                                        d_head)
+
+
+def init_paged_attn_state(b: int, max_pages: int) -> rfa.AttnServeState:
+    """Detached paged exact-KV serve state for one attention block: a
+    per-row page table + write index, with ``kv_k``/``kv_v`` left None.
+    The shared page pools live OUTSIDE the slot pool (they have no slot
+    axis — see ``lm.init_kv_pages``) and are attached around each jitted
+    step (``lm.attach_kv_pages``); the slot-pool ops in
+    repro/serving/slots.py skip the None leaves."""
+    return rfa.AttnServeState(
+        length=jnp.zeros((b,), jnp.int32),
+        table=jnp.zeros((b, max_pages), jnp.int32))

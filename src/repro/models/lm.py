@@ -547,6 +547,59 @@ def init_serve_state(cfg: ModelConfig, b: int, max_len: int,
     return state
 
 
+def init_paged_serve_state(cfg: ModelConfig, b: int, max_len: int,
+                           page_size: int) -> dict:
+    """Slot pool for the block-granular paged exact-KV layout.
+
+    Exact + layer-stacked only: each row carries a (max_pages,) page
+    table and a write index per layer; the shared page pools come from
+    :func:`init_kv_pages` and are attached around each jitted step
+    (:func:`attach_kv_pages`). Slot ops see only the detached tree (the
+    None kv leaves are skipped), so admission/commit/freeze scatter
+    tables and lengths — never pages: forking a cached prefix into N
+    rows copies page IDS, not keys/values
+    (repro/serving/prefix_cache.py)."""
+    if cfg.attn.kind != "exact" or not can_stack_layers(cfg):
+        raise ValueError(
+            f"{cfg.name}: paged KV serve states need an exact-attention "
+            f"layer-stacked config (kind={cfg.attn.kind}, "
+            f"stackable={can_stack_layers(cfg)})")
+    max_pages = -(-max_len // page_size)
+    state = {"layers": jax.vmap(
+        lambda _: ab.init_paged_attn_state(b, max_pages))(
+        jnp.arange(cfg.n_layers)),
+        "pos": jnp.zeros((b,), jnp.int32)}
+    return state
+
+
+def init_kv_pages(cfg: ModelConfig, n_pages: int, page_size: int) -> dict:
+    """Shared per-layer exact-KV page pools: {"k", "v"} each
+    (n_layers, n_pages, page_size, G, d_head). Page 0 is the reserved
+    garbage page masked/inactive writes are routed to."""
+    shape = (cfg.n_layers, n_pages, page_size, cfg.n_kv, cfg.head_dim)
+    return {"k": jnp.zeros(shape, jnp.float32),
+            "v": jnp.zeros(shape, jnp.float32)}
+
+
+def attach_kv_pages(state: dict, pages: dict) -> dict:
+    """Graft the shared page pools into a detached paged serve state so
+    ``decode_step`` / ``prefill_chunk`` can run it: the per-layer scan
+    slices pages along the leading layer axis exactly like every other
+    state leaf."""
+    return {**state,
+            "layers": state["layers"]._replace(kv_k=pages["k"],
+                                               kv_v=pages["v"])}
+
+
+def detach_kv_pages(state: dict) -> tuple[dict, dict]:
+    """Inverse of :func:`attach_kv_pages`: split an advanced state back
+    into (detached slot-pool tree, updated page pools)."""
+    la = state["layers"]
+    pages = {"k": la.kv_k, "v": la.kv_v}
+    return ({**state, "layers": la._replace(kv_k=None, kv_v=None)},
+            pages)
+
+
 def prefill_chunk(params, cfg: ModelConfig, batch: dict, state: dict,
                   valid_len: Optional[Array] = None,
                   proj: Optional[dict] = None,

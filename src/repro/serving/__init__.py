@@ -5,10 +5,15 @@ Public surface:
   * ``Request`` / ``RequestResult`` — what clients submit and get back
   * ``ServingEngine``               — queue + slot pool + batched decode
   * ``slots``                       — slot-pool pytree primitives
+  * ``PrefixCache`` / ``PrefixCacheConfig`` — prefix snapshot store
+    behind ``ServingEngine(prefix_cache=...)`` fork-on-admit reuse
+    (``PageAllocator`` manages the exact paged-KV page pool)
 
 Design doc: docs/serving.md. The CLI front-end is
 ``python -m repro.launch.serve``.
 """
 from repro.serving import slots
 from repro.serving.engine import ServingEngine
+from repro.serving.prefix_cache import (NoFreePages, PageAllocator,
+                                        PrefixCache, PrefixCacheConfig)
 from repro.serving.request import Request, RequestResult

@@ -86,6 +86,21 @@ collapses to whatever dispatch could not hide. ``flush()`` drains the
 in-flight tail (stream end / step-driven callers); cancellation drops a
 request's in-flight tokens without a callback.
 
+``prefix_cache=`` adds admission-time prefix reuse
+(repro/serving/prefix_cache.py): chunked prefill captures state
+snapshots at block-aligned cursor boundaries, and a later request whose
+prompt starts with a cached prefix is admitted by FORKING the snapshot
+— one broadcast scatter seeds its staging row (``slots.fork_slots``)
+and its cursor starts at the cached length, so only the un-cached
+suffix is prefilled. For the PRF kinds the fork is O(1) in prefix
+length (the state is the fixed-size (S, z, c) tuple); exact configs
+switch the pools to a block-granular PAGED KV layout — rows hold page
+tables over shared page pools, a fork shares the prefix's full pages
+(refcounted) and copies only the partial tail page (copy-on-write).
+Both schedulers go through the same admission path, so fork-on-admit
+composes with overlap, cancel and flush; ``stats`` gains ``prefix_*``
+hit/capture/eviction counters and ``forked_tokens``.
+
 Pass ``mesh=`` to place BOTH pools under a device mesh: every pool leaf
 is sharded per ``repro.parallel.serve_state_specs`` (slots over the data
 axes, head groups of the KV-cache / linear state over 'model'),
@@ -141,6 +156,8 @@ import numpy as np
 
 from repro.models import lm
 from repro.serving import slots as slot_ops
+from repro.serving.prefix_cache import (NoFreePages, PageAllocator,
+                                        PrefixCache, PrefixCacheConfig)
 from repro.serving.request import Request, RequestResult
 
 Array = jax.Array
@@ -198,6 +215,9 @@ class ServingEngine:
     of two to bound recompiles; disable it for bit-exact parity with
     the serial unpadded schedule at P=1. ``mesh`` shards the slot and
     staging pools per ``serve_state_specs`` (see module docstring).
+    ``prefix_cache`` (True for defaults, or a ``PrefixCacheConfig``)
+    enables snapshot capture + fork-on-admit prefix reuse, switching
+    exact configs to the paged-KV layout (module docstring).
     """
 
     def __init__(self, params, cfg: lm.ModelConfig, *, max_slots: int = 4,
@@ -205,7 +225,9 @@ class ServingEngine:
                  seed: int = 0, mesh=None,
                  prefill_rows: Optional[int] = None,
                  bucket_prefill: bool = True,
-                 overlap: bool = False):
+                 overlap: bool = False,
+                 prefix_cache: Union[bool, PrefixCacheConfig,
+                                     None] = None):
         if cfg.modality != "text":
             raise ValueError("serving engine drives text decode only")
         if chunk_tokens is not None and chunk_tokens < 1:
@@ -226,19 +248,66 @@ class ServingEngine:
         # (lm.can_stack_layers); heterogeneous patterns keep the
         # per-unit layout
         self._stacked = lm.can_stack_layers(cfg)
-        self.pool = lm.init_serve_state(cfg, b=max_slots, max_len=max_len,
-                                        per_slot=True,
-                                        stacked=self._stacked)
-        # fixed-size staging pool: row i holds the partial prefill state
-        # of the admission reserved on slot i (same pytree as the pool)
-        self.staging = lm.init_serve_state(cfg, b=max_slots,
-                                           max_len=max_len, per_slot=True,
-                                           stacked=self._stacked)
-        # immutable one-row template scattered at admission; every
-        # prefill chain starts from this fresh per-slot row
-        self._fresh_row = lm.init_serve_state(cfg, b=1, max_len=max_len,
-                                              per_slot=True,
-                                              stacked=self._stacked)
+        if prefix_cache is True:
+            prefix_cache = PrefixCacheConfig()
+        self._pc_cfg: Optional[PrefixCacheConfig] = prefix_cache or None
+        # with a prefix cache, exact configs switch the pools to the
+        # block-granular paged-KV layout: rows hold page TABLES over a
+        # shared page pool, so a cached prefix's pages can be shared
+        # across forks (copy-on-write on the partial tail page only).
+        # Every other kind's state is fixed-size, so snapshots fork
+        # through the plain broadcast scatter and need no paging.
+        self._paged = (self._pc_cfg is not None and self._stacked
+                       and cfg.attn.kind == "exact"
+                       and any(k in ("attn", "local")
+                               for k in cfg.layer_kinds()))
+        if self._paged:
+            ps = self._pc_cfg.page_size
+            self._page_size = ps
+            self._max_pages = -(-max_len // ps)
+            # page 0 is the reserved garbage page; beyond every slot's
+            # worst case, ``cache_pages`` extra pages let cached
+            # prefixes stay resident while all slots are busy
+            cache_pages = self._pc_cfg.cache_pages or 2 * self._max_pages
+            n_pages = 1 + max_slots * self._max_pages + cache_pages
+            self.pool = lm.init_paged_serve_state(cfg, b=max_slots,
+                                                  max_len=max_len,
+                                                  page_size=ps)
+            self.staging = lm.init_paged_serve_state(cfg, b=max_slots,
+                                                     max_len=max_len,
+                                                     page_size=ps)
+            self._fresh_row = lm.init_paged_serve_state(cfg, b=1,
+                                                        max_len=max_len,
+                                                        page_size=ps)
+            self._pages = lm.init_kv_pages(cfg, n_pages, ps)
+            self._alloc = PageAllocator(n_pages)
+            self._page_bytes_each = (2 * cfg.n_layers * ps * cfg.n_kv
+                                     * cfg.head_dim * 4)
+        else:
+            self.pool = lm.init_serve_state(cfg, b=max_slots,
+                                            max_len=max_len,
+                                            per_slot=True,
+                                            stacked=self._stacked)
+            # fixed-size staging pool: row i holds the partial prefill
+            # state of the admission reserved on slot i (same pytree as
+            # the pool)
+            self.staging = lm.init_serve_state(cfg, b=max_slots,
+                                               max_len=max_len,
+                                               per_slot=True,
+                                               stacked=self._stacked)
+            # immutable one-row template scattered at admission; every
+            # prefill chain starts from this fresh per-slot row
+            self._fresh_row = lm.init_serve_state(cfg, b=1,
+                                                  max_len=max_len,
+                                                  per_slot=True,
+                                                  stacked=self._stacked)
+            self._pages = None
+            self._alloc = None
+        # physical page ids owned by each slot (refcounts in _alloc);
+        # freed slots park here until _flush_freed zeroes their tables
+        # and releases the pages (zombie-write safety, see _free)
+        self._slot_pages: list[Optional[list[int]]] = [None] * max_slots
+        self._pending_clear: list[int] = []
         # precomposed per-layer serve projections (A = (W M)^T): the
         # M·Wᵀ composition happens HERE, once at engine build — the
         # fused decode megakernel then does a single x @ A per token,
@@ -266,6 +335,24 @@ class ServingEngine:
                 serve_state_specs(self.pool, mesh), mesh)
             self.pool = jax.device_put(self.pool, pool_shardings)
             self.staging = jax.device_put(self.staging, pool_shardings)
+            if self._paged:
+                # the shared page pools carry no slot axis; replicate
+                # them (page gathers/scatters are id-indexed)
+                from jax.sharding import NamedSharding, PartitionSpec
+                rep = NamedSharding(mesh, PartitionSpec())
+                self._pages = jax.device_put(self._pages,
+                                             {"k": rep, "v": rep})
+
+        # prefix-hash -> state-snapshot store; snapshots are promoted
+        # back to device with the pools' mesh sharding on a host-tier
+        # hit, and evicted paged entries hand their pages back to the
+        # allocator (repro/serving/prefix_cache.py)
+        self.prefix_cache: Optional[PrefixCache] = None
+        if self._pc_cfg is not None:
+            self.prefix_cache = PrefixCache(
+                self._pc_cfg, to_device=self._snapshot_to_device,
+                release_pages=(self._alloc.release if self._paged
+                               else None))
 
         self._slots: list[Optional[_Slot]] = [None] * max_slots
         self._active = np.zeros(max_slots, bool)
@@ -296,7 +383,8 @@ class ServingEngine:
                        "prefill_calls": 0, "prefill_padded_tokens": 0,
                        "prefill_rows_max": 0,
                        "max_prefill_tokens_per_step": 0,
-                       "emitted_tokens": 0, "admitted": 0, "finished": 0}
+                       "emitted_tokens": 0, "admitted": 0, "finished": 0,
+                       "forked_requests": 0, "forked_tokens": 0}
 
         cfg_ = cfg  # closed over by the jitted steps
 
@@ -332,12 +420,60 @@ class ServingEngine:
             return _constrain(slot_ops.merge_slots(pool, staging, idx))
 
         def _reset(staging, fresh, idx):
-            # one scatter resets every slot admitted this step: the
-            # one-row fresh template is broadcast along the slot axis
+            # one broadcast scatter seeds every slot admitted this step
+            # — from the fresh one-row template, or from a cached prefix
+            # snapshot (fork-on-admit: the prefix cache's O(1) fork IS
+            # this scatter, repro/serving/prefix_cache.py)
+            return _constrain(slot_ops.fork_slots(staging, fresh, idx))
+
+        def _snap(staging, idx):
+            # one-row snapshot gather for prefix capture; read_slots
+            # keeps the slot axis, so the row round-trips through the
+            # seed scatters above
+            return slot_ops.read_slots(staging, idx)
+
+        def _decode_paged(params, proj, pool, pages, toks, active,
+                          all_active):
+            # paged exact layout: graft the shared page pools into the
+            # detached slot tree around the step, split them back out
+            # after (pages are donated through, like the pool)
+            st = lm.attach_kv_pages(pool, pages)
+            logits, new = lm.decode_step(params, cfg_, toks, st,
+                                         proj=proj)
+            new, pages = lm.detach_kv_pages(new)
+            new = slot_ops.freeze_inactive(pool, new, active,
+                                           all_active=all_active)
+            return logits, _constrain(new), pages
+
+        def _prefill_paged(params, proj, staging, pages, toks, idx,
+                           valid_len):
+            sub = slot_ops.read_slots(staging, idx)
+            logits, new = lm.prefill_chunk(
+                params, cfg_, {"tokens": toks},
+                lm.attach_kv_pages(sub, pages), valid_len=valid_len,
+                proj=proj)
+            new, pages = lm.detach_kv_pages(new)
+            return (logits,
+                    _constrain(slot_ops.write_slots(staging, new, idx)),
+                    pages)
+
+        def _seed_paged(staging, row, idx, tables):
+            # paged admission/fork seed: broadcast the snapshot (or
+            # fresh) row, but give every seeded slot its OWN page table
+            # — shared prefix pages + freshly allocated growth pages
             k = idx.shape[0]
-            fresh_k = slot_ops.tree_slot_map(
-                lambda p, axis: jnp.repeat(p, k, axis=axis), fresh)
-            return _constrain(slot_ops.write_slots(staging, fresh_k, idx))
+            rows = slot_ops.tree_slot_map(
+                lambda p, axis: jnp.repeat(p, k, axis=axis), row)
+            la = rows["layers"]
+            rows["layers"] = la._replace(table=jnp.broadcast_to(
+                tables[None], (la.table.shape[0],) + tables.shape))
+            return _constrain(slot_ops.write_slots(staging, rows, idx))
+
+        def _copy_pages(pages, src, dst):
+            # copy-on-write at fork: duplicate the partial tail pages
+            # ``src`` into ``dst`` across the k/v pools of every layer
+            return {n: p.at[:, dst].set(jnp.take(p, src, axis=1))
+                    for n, p in pages.items()}
 
         def _scatter_toks(feed, idx, vals):
             # merge first tokens into the device token feed
@@ -391,9 +527,20 @@ class ServingEngine:
             return _sample(jnp.take(logits, ridx, axis=0),
                            uids, counts, temps, top_ks, top_ps)
 
-        self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
-                                  static_argnums=(5,))
-        self._prefill_fn = jax.jit(_prefill, donate_argnums=(2,))
+        if self._paged:
+            self._decode_fn = jax.jit(_decode_paged,
+                                      donate_argnums=(2, 3),
+                                      static_argnums=(6,))
+            self._prefill_fn = jax.jit(_prefill_paged,
+                                       donate_argnums=(2, 3))
+            self._seed_fn = jax.jit(_seed_paged, donate_argnums=(0,))
+            self._copy_pages_fn = jax.jit(_copy_pages,
+                                          donate_argnums=(0,))
+        else:
+            self._decode_fn = jax.jit(_decode, donate_argnums=(2,),
+                                      static_argnums=(5,))
+            self._prefill_fn = jax.jit(_prefill, donate_argnums=(2,))
+        self._snap_fn = jax.jit(_snap)
         self._commit_fn = jax.jit(_commit, donate_argnums=(0,))
         self._reset_fn = jax.jit(_reset, donate_argnums=(0,))
         self._scatter_fn = jax.jit(_scatter_toks, donate_argnums=(0,))
@@ -419,12 +566,25 @@ class ServingEngine:
         if not any(k in ("attn", "local") for k in cfg.layer_kinds()):
             path = "none"
         elif cfg.attn.kind == "exact":
-            path = "exact"
+            # "exact_paged": softmax over a block-granular page table
+            # into the shared page pools (prefix-cache engines)
+            path = "exact_paged" if self._paged else "exact"
         elif self._decode_proj is not None:
             path = "fused_kernel"
         else:
             path = "jnp"
         return {"prefill_path": path, "decode_path": path}
+
+    def _snapshot_to_device(self, tree):
+        """Promote a host-tier prefix snapshot back to device, with the
+        pools' mesh sharding when the engine runs sharded (the b=1 slot
+        dims replicate under ``serve_state_specs``)."""
+        if self.mesh is None:
+            return jax.device_put(tree)
+        from repro.parallel import serve_state_specs, make_shardings
+        return jax.device_put(
+            tree, make_shardings(serve_state_specs(tree, self.mesh),
+                                 self.mesh))
 
     # -- clock ------------------------------------------------------------
 
@@ -540,6 +700,33 @@ class ServingEngine:
         self._uids[i] = 0
         if i in self._prefill_order:
             self._prefill_order.remove(i)
+        if self._paged and self._slot_pages[i] is not None:
+            # don't release the pages yet: dispatches already enqueued
+            # against this row (a lock-step decode, an in-flight chunk)
+            # may still write through its table. _flush_freed zeroes the
+            # table first — routing any zombie write to the garbage
+            # page — then hands the pages back.
+            self._pending_clear.append(i)
+
+    def _flush_freed(self) -> None:
+        """Zero the pool/staging page tables of slots freed since the
+        last step, then release their pages. Runs at the head of every
+        step, BEFORE admissions can reallocate the pages: the table
+        resets are enqueued behind any straggling writes (single-stream
+        dispatch order), so a reallocated page can never be clobbered by
+        a freed row's in-flight tail."""
+        if not self._paged or not self._pending_clear:
+            return
+        idx = jnp.asarray(sorted(set(self._pending_clear)), jnp.int32)
+        self.pool = self._reset_fn(self.pool, self._fresh_row, idx)
+        self.staging = self._reset_fn(self.staging, self._fresh_row, idx)
+        self._dispatch_seq += 2
+        for i in set(self._pending_clear):
+            pages = self._slot_pages[i]
+            self._slot_pages[i] = None
+            if pages:
+                self._alloc.release(pages)
+        self._pending_clear.clear()
 
     def _activate(self, i: int) -> None:
         """Load slot i's sampling params into the batched host arrays."""
@@ -566,31 +753,112 @@ class ServingEngine:
             jnp.full((1,), req.top_k, jnp.int32),
             jnp.full((1,), req.top_p, jnp.float32))[0])
 
+    def _paged_admit_pages(self, req: Request, ent) -> tuple:
+        """Build an admission's page table: the cached prefix's fully
+        covered pages are SHARED (refcount retained), its partial tail
+        page is queued for a copy-on-write duplication, and fresh pages
+        cover the rest of prompt + generation budget. Returns (table
+        (max_pages,) int32, owned page ids, [(src, dst)] tail copies).
+        Raises NoFreePages (after trying a cache reclaim) to defer the
+        admission."""
+        ps = self._page_size
+        budget = min(req.max_new_tokens, self.max_len - len(req.prompt))
+        n_total = -(-(len(req.prompt) + budget) // ps)
+        n_shared = 0 if ent is None else len(ent.tokens) // ps
+        shared = [] if ent is None else list(ent.pages[:n_shared])
+        tail_src = (ent.pages[n_shared]
+                    if ent is not None and len(ent.tokens) % ps else None)
+        n_new = n_total - n_shared
+        if n_new > self._alloc.n_free:
+            self.prefix_cache.reclaim_pages(self._alloc, n_new)
+        fresh = self._alloc.alloc(n_new)          # raises NoFreePages
+        self._alloc.retain(shared)
+        copies = [] if tail_src is None else [(tail_src, fresh[0])]
+        own = shared + fresh
+        table = np.zeros(self._max_pages, np.int32)
+        table[:len(own)] = own
+        return table, own, copies
+
+    def _seed(self, row: dict, idxs: list, tables: list) -> None:
+        """Seed staging rows ``idxs`` from the one-row state ``row`` in
+        one broadcast scatter (paged rows also get their own tables)."""
+        idx = jnp.asarray(idxs, jnp.int32)
+        if self._paged:
+            self.staging = self._seed_fn(self.staging, row, idx,
+                                         jnp.asarray(np.stack(tables)))
+        else:
+            self.staging = self._reset_fn(self.staging, row, idx)
+        self._dispatch_seq += 1
+
     def _admissions(self, now: float) -> None:
-        """Reserve a free slot (prefill cursor 0, freshly reset staging
-        row) for every arrived request, FIFO. The step's staging-row
-        resets are batched into one scatter."""
-        admitted: list[int] = []
+        """Reserve a free slot (freshly seeded staging row) for every
+        arrived request, FIFO. With a prefix cache, admission first
+        matches the longest cached prefix and seeds the staging row from
+        its snapshot instead of the fresh template (fork-on-admit): the
+        slot's cursor starts at the cached length and chunked prefill
+        resumes from there, so only the un-cached suffix is computed.
+        Same-entry admissions share one broadcast seed scatter; paged
+        admissions allocate their page tables here and defer (stay
+        queued) when the page pool is exhausted even after evicting
+        cached prefixes."""
+        fresh_adm: list[int] = []
+        fresh_tables: list = []
+        forks: dict[str, list] = {}    # entry key -> [ent, idxs, tables]
+        copies: list[tuple[int, int]] = []
         while self._queue and self._queue[0].arrival_time <= now:
             free = [i for i in range(self.max_slots)
                     if self._slots[i] is None]
             if not free:
                 break
-            req = self._queue.pop(0)
+            req = self._queue[0]
+            ent = (self.prefix_cache.match(req.prompt)
+                   if self.prefix_cache is not None else None)
+            table = own = None
+            if self._paged:
+                try:
+                    table, own, cps = self._paged_admit_pages(req, ent)
+                except NoFreePages:
+                    # backpressure: requeue (it never left the queue)
+                    # and undo the match stat so the retry next step
+                    # doesn't double-count
+                    if ent is not None:
+                        self.prefix_cache.hits -= 1
+                    else:
+                        self.prefix_cache.misses -= 1
+                    break
+                copies.extend(cps)
+            self._queue.pop(0)
+            i = free[0]
             result = RequestResult(uid=req.uid,
                                    prompt=list(map(int, req.prompt)),
                                    arrival_time=req.arrival_time)
             # exact-cache pages hold max_len keys: prompt + decoded tokens
             budget = min(req.max_new_tokens,
                          self.max_len - len(req.prompt))
-            self._slots[free[0]] = _Slot(req, result, budget)
-            admitted.append(free[0])
-            self._prefill_order.append(free[0])
-        if admitted:
-            self.staging = self._reset_fn(
-                self.staging, self._fresh_row,
-                jnp.asarray(admitted, jnp.int32))
+            self._slots[i] = _Slot(req, result, budget)
+            self._slot_pages[i] = own
+            self._prefill_order.append(i)
+            if ent is not None:
+                self._slots[i].cursor = len(ent.tokens)
+                self._stats["forked_requests"] += 1
+                self._stats["forked_tokens"] += len(ent.tokens)
+                grp = forks.setdefault(ent.key, [ent, [], []])
+                grp[1].append(i)
+                grp[2].append(table)
+            else:
+                fresh_adm.append(i)
+                fresh_tables.append(table)
+        if copies:
+            # one batched CoW duplication for every forked tail page
+            self._pages = self._copy_pages_fn(
+                self._pages, jnp.asarray([s for s, _ in copies],
+                                         jnp.int32),
+                jnp.asarray([d for _, d in copies], jnp.int32))
             self._dispatch_seq += 1
+        if fresh_adm:
+            self._seed(self._fresh_row, fresh_adm, fresh_tables)
+        for ent, idxs, tables in forks.values():
+            self._seed(self.prefix_cache.device_state(ent), idxs, tables)
 
     def _plan_prefill(self) -> list[tuple[int, int]]:
         """Token-budget packer: split this step's prompt-token budget
@@ -648,6 +916,37 @@ class ServingEngine:
         self._stats["max_prefill_tokens_per_step"] = max(
             self._stats["max_prefill_tokens_per_step"], spent)
 
+    def _maybe_capture(self, i: int) -> None:
+        """Capture a prefix snapshot of slot i's staging row when its
+        prefill cursor just crossed a ``block_tokens`` boundary (or, with
+        ``capture_final``, completed the prompt — the multi-turn reuse
+        point). The snapshot is a one-row gather of the staging pool;
+        paged rows additionally retain their covering prefix pages so
+        the entry keeps them alive after the donor slot is freed."""
+        pc = self.prefix_cache
+        if pc is None:
+            return
+        slot = self._slots[i]
+        cur = slot.cursor
+        bt = pc.cfg.block_tokens
+        final = cur == len(slot.req.prompt)
+        if not ((cur > 0 and cur % bt == 0)
+                or (final and pc.cfg.capture_final)):
+            return
+        tokens = slot.req.prompt[:cur]
+        if pc.has(tokens):
+            return
+        snap = self._snap_fn(self.staging, jnp.asarray([i], jnp.int32))
+        self._dispatch_seq += 1
+        if self._paged:
+            n_cov = -(-cur // self._page_size)
+            pages = list(self._slot_pages[i][:n_cov])
+            self._alloc.retain(pages)
+            pc.put(tokens, snap, pages=pages,
+                   page_bytes=n_cov * self._page_bytes_each)
+        else:
+            pc.put(tokens, snap)
+
     # -- sequential scheduler ---------------------------------------------
 
     def _prefill_work(self) -> None:
@@ -669,9 +968,14 @@ class ServingEngine:
         # serial schedule); ragged rows carry per-row valid lengths
         vl = None if (ts == l_pad).all() else jnp.asarray(ts)
         idx = jnp.asarray([i for i, _ in grants], jnp.int32)
-        logits, self.staging = self._prefill_fn(
-            self._step_params, self._decode_proj, self.staging,
-            jnp.asarray(toks), idx, vl)
+        if self._paged:
+            logits, self.staging, self._pages = self._prefill_fn(
+                self._step_params, self._decode_proj, self.staging,
+                self._pages, jnp.asarray(toks), idx, vl)
+        else:
+            logits, self.staging = self._prefill_fn(
+                self._step_params, self._decode_proj, self.staging,
+                jnp.asarray(toks), idx, vl)
         self._dispatch_seq += 1
         self._record_prefill_stats(len(grants), int(ts.sum()), l_pad)
 
@@ -679,6 +983,7 @@ class ServingEngine:
         for r, (i, t) in enumerate(grants):
             slot = self._slots[i]
             slot.cursor += t
+            self._maybe_capture(i)
             if slot.cursor == len(slot.req.prompt):
                 done.append((r, i))
         if not done:
@@ -822,10 +1127,16 @@ class ServingEngine:
         counts = np.zeros(self.max_slots, np.int32)
         for i in rows:
             counts[i] = self._slots[i].emitted
-        logits, self.pool = self._decode_fn(
-            self._step_params, self._decode_proj, self.pool,
-            self._feed, jnp.asarray(self._active),
-            bool(self._active.all()))
+        if self._paged:
+            logits, self.pool, self._pages = self._decode_fn(
+                self._step_params, self._decode_proj, self.pool,
+                self._pages, self._feed, jnp.asarray(self._active),
+                bool(self._active.all()))
+        else:
+            logits, self.pool = self._decode_fn(
+                self._step_params, self._decode_proj, self.pool,
+                self._feed, jnp.asarray(self._active),
+                bool(self._active.all()))
         self._dispatch_seq += 1
         uids = jnp.asarray(self._uids)
         counts_j = jnp.asarray(counts)
@@ -867,15 +1178,21 @@ class ServingEngine:
         l_pad = ch["l_pad"]
         vl = None if (ts == l_pad).all() else jnp.asarray(ts)
         idx = jnp.asarray([i for i, _, _ in grants], jnp.int32)
-        logits, self.staging = self._prefill_fn(
-            self._step_params, self._decode_proj, self.staging,
-            jnp.asarray(toks), idx, vl)
+        if self._paged:
+            logits, self.staging, self._pages = self._prefill_fn(
+                self._step_params, self._decode_proj, self.staging,
+                self._pages, jnp.asarray(toks), idx, vl)
+        else:
+            logits, self.staging = self._prefill_fn(
+                self._step_params, self._decode_proj, self.staging,
+                jnp.asarray(toks), idx, vl)
         self._dispatch_seq += 1
         self._record_prefill_stats(len(grants), int(ts.sum()), l_pad)
         done: list[tuple[int, int, int]] = []
         for r, (i, uid, t) in enumerate(grants):
             slot = self._slots[i]
             slot.cursor += t
+            self._maybe_capture(i)
             if slot.cursor == len(slot.req.prompt):
                 self._prefill_order.remove(i)
                 done.append((i, uid, r))
@@ -905,6 +1222,7 @@ class ServingEngine:
         retire/admit/merge/decode/prefill/pack timeline."""
         finished: list[RequestResult] = []
         self._retire(finished)
+        self._flush_freed()
         self._admissions(self._now())
         first_rec = self._merge_pending()
         decode_rec = self._dispatch_decode()
@@ -946,6 +1264,7 @@ class ServingEngine:
         if self.overlap:
             return self._step_overlap()
         finished: list[RequestResult] = []
+        self._flush_freed()
         self._admissions(self._now())
         self._prefill_work()
         # admission may already exhaust a request (budget/eos on token 1)
@@ -960,10 +1279,16 @@ class ServingEngine:
         counts = np.zeros(self.max_slots, np.int32)
         for i in np.nonzero(self._active)[0]:
             counts[i] = self._slots[i].emitted
-        logits, self.pool = self._decode_fn(
-            self._step_params, self._decode_proj, self.pool,
-            jnp.asarray(self._toks), jnp.asarray(self._active),
-            bool(self._active.all()))
+        if self._paged:
+            logits, self.pool, self._pages = self._decode_fn(
+                self._step_params, self._decode_proj, self.pool,
+                self._pages, jnp.asarray(self._toks),
+                jnp.asarray(self._active), bool(self._active.all()))
+        else:
+            logits, self.pool = self._decode_fn(
+                self._step_params, self._decode_proj, self.pool,
+                jnp.asarray(self._toks), jnp.asarray(self._active),
+                bool(self._active.all()))
         self._dispatch_seq += 1
         # host-side check: only pay the full-vocab sort/cumsum masks when
         # some active row actually uses top-k/p (the masks are identity
@@ -1048,6 +1373,13 @@ class ServingEngine:
         s = dict(self._stats)
         s.update(self._serve_paths)
         s["overlap"] = self.overlap
+        s["paged_kv"] = self._paged
+        if self.prefix_cache is not None:
+            s.update(self.prefix_cache.stats)
+        if self._paged:
+            s["kv_page_size"] = self._page_size
+            s["kv_pages_total"] = self._alloc.n_pages
+            s["kv_pages_free"] = self._alloc.n_free
         steps = max(s["decode_steps"], 1)
         # fraction of slot-steps that carried a live sequence
         s["mean_occupancy"] = (s["decode_slot_steps"]

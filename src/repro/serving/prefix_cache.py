@@ -1,0 +1,325 @@
+"""Prefix cache: prefix-hash → state-snapshot store with O(1) forking.
+
+Production traffic is dominated by shared prefixes (system prompts,
+few-shot templates, multi-turn history). The PRF kinds make reuse
+uniquely cheap: a prefix's whole attention state is the fixed-size
+(S, z, c) tuple per layer, so "fork a cached prefix into N requests"
+is ONE slot-pool broadcast scatter (``slots.fork_slots``) — no paged KV
+copy, no allocator, context-length-independent snapshot bytes.
+
+This module owns the store; the engine owns the fork
+(repro/serving/engine.py):
+
+  * **Keys** — ``blake2b`` over the prefix's int32 token bytes. Entries
+    keep the token tuple and verify it on lookup, so a hash collision
+    can never splice the wrong state into a request. Snapshots are
+    captured when a request's prefill cursor crosses a
+    ``block_tokens``-aligned boundary (and, optionally, at prompt
+    completion — the multi-turn case), so candidate match lengths are
+    the aligned boundaries plus whatever full-prompt lengths the store
+    holds. A match must leave at least one prompt token unprefilled
+    (the engine samples the first output token from real final-chunk
+    logits, never from a cached state).
+  * **Tiers** — snapshots are born on DEVICE (they are gathered out of
+    the staging pool and fork back in without a host round-trip). When
+    the device tier exceeds ``device_bytes`` the LRU entries demote to
+    HOST numpy; when the host tier exceeds ``host_bytes`` they are
+    evicted. A host hit is promoted back through the engine-supplied
+    ``to_device`` (which applies the mesh sharding of
+    ``serve_state_specs`` when the engine runs sharded).
+  * **Eviction order** — strict LRU by last hit/capture tick, demote
+    before evict; ``stats`` surfaces hits/misses/captures/demotions/
+    evictions and per-tier bytes, which the engine folds into
+    ``eng.stats`` under ``prefix_*`` keys.
+
+For the EXACT fallback the snapshot is not O(1): its KV grows with the
+prefix. The engine therefore switches exact configs to block-granular
+paged KV (``lm.init_paged_serve_state``): a cached prefix retains its
+physical pages here (refcounted in :class:`PageAllocator`) and a fork
+shares every fully-covered prefix page, copying only the partial tail
+page — copy-on-write at page granularity, vLLM-style. Pages only ever
+append at a row's own length, so a fully-covered page is immutable and
+sharing is exact, not approximate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PrefixCacheConfig:
+    """Knobs for the prefix cache (engine: ``prefix_cache=``; CLI:
+    ``--prefix-cache`` + budget flags).
+
+    ``block_tokens`` is the capture/match granularity: snapshots are
+    taken when a prefill cursor lands on a multiple of it. Keep it
+    aligned with the engine's chunk grants (a pow-2 that divides
+    ``chunk_tokens``) so capture points coincide with chunk boundaries
+    and forked remainders resume on the cold-start chunk grid — that
+    alignment is what makes forked streams bitwise-equal to cold-start
+    ones (docs/serving.md §prefix cache). ``capture_final`` also
+    snapshots completed prompts at unaligned lengths (multi-turn reuse).
+    ``page_size`` / ``cache_pages`` only apply to the exact paged-KV
+    layout: pool pages per block, and how many extra pool pages are
+    reserved to keep cached prefixes alive beyond the slots' own needs.
+    """
+    block_tokens: int = 16
+    device_bytes: int = 64 << 20
+    host_bytes: int = 256 << 20
+    capture_final: bool = True
+    page_size: int = 16
+    cache_pages: int = 0          # 0 -> engine default (2 slots' worth)
+
+    def __post_init__(self):
+        if self.block_tokens < 1:
+            raise ValueError("block_tokens must be >= 1")
+        if self.page_size < 1:
+            raise ValueError("page_size must be >= 1")
+
+
+class NoFreePages(RuntimeError):
+    """Page pool exhausted (after cache reclaim) — the engine defers
+    the admission instead of corrupting resident pages."""
+
+
+class PageAllocator:
+    """Host-side refcounted allocator over the shared device page pool.
+
+    Page 0 is reserved as the garbage page (masked and inactive writes
+    land there) and is never handed out. ``retain`` / ``release`` move
+    refcounts — a page returns to the free list when its count drops to
+    zero, so cache entries and forked rows can share prefix pages and
+    the pool reclaims them only when the last owner lets go.
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("page pool needs >= 2 pages (page 0 is "
+                             "the reserved garbage page)")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))
+        self._ref = np.zeros(n_pages, np.int32)
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> list[int]:
+        if n > len(self._free):
+            raise NoFreePages(
+                f"need {n} pages, {len(self._free)} free "
+                f"(pool has {self.n_pages})")
+        ids = [self._free.pop() for _ in range(n)]
+        self._ref[ids] = 1
+        return ids
+
+    def retain(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            assert self._ref[i] > 0, f"retain of unowned page {i}"
+            self._ref[i] += 1
+
+    def release(self, ids: Sequence[int]) -> None:
+        for i in ids:
+            assert i != 0 and self._ref[i] > 0, f"bad release of page {i}"
+            self._ref[i] -= 1
+            if self._ref[i] == 0:
+                self._free.append(i)
+
+
+def prefix_key(tokens: Sequence[int]) -> str:
+    """Stable content hash of a token prefix (int32 little-endian)."""
+    return hashlib.blake2b(np.asarray(tokens, np.int32).tobytes(),
+                           digest_size=16).hexdigest()
+
+
+def _tree_bytes(tree) -> int:
+    return sum(leaf.nbytes for leaf in jax.tree_util.tree_leaves(tree))
+
+
+class _Entry:
+    __slots__ = ("key", "tokens", "state", "on_host", "state_bytes",
+                 "page_bytes", "pages", "tick")
+
+    def __init__(self, key, tokens, state, state_bytes, page_bytes,
+                 pages, tick):
+        self.key = key
+        self.tokens = tokens            # tuple[int], len == prefix_len
+        self.state = state              # 1-row detached serve state
+        self.on_host = False
+        self.state_bytes = state_bytes
+        self.page_bytes = page_bytes    # resident KV page bytes (paged)
+        self.pages = pages              # retained physical ids, or None
+        self.tick = tick
+
+
+class PrefixCache:
+    """Two-tier LRU store of prefix-state snapshots (module docstring).
+
+    ``to_host`` / ``to_device`` are the tier movers the engine supplies
+    (``jax.device_get`` and a mesh-aware ``device_put``);
+    ``release_pages`` is called with an evicted entry's retained page
+    ids (paged exact only) so the :class:`PageAllocator` can reclaim
+    them.
+    """
+
+    def __init__(self, cfg: PrefixCacheConfig, *,
+                 to_host: Callable = jax.device_get,
+                 to_device: Callable = jax.device_put,
+                 release_pages: Optional[Callable] = None):
+        self.cfg = cfg
+        self._to_host = to_host
+        self._to_device = to_device
+        self._release_pages = release_pages
+        self._entries: dict[str, _Entry] = {}
+        self._lengths: dict[int, int] = {}   # prefix_len -> entry count
+        self._tick = 0
+        self.hits = 0
+        self.misses = 0
+        self.captures = 0
+        self.demotions = 0
+        self.evictions = 0
+
+    # -- introspection ----------------------------------------------------
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def has(self, tokens: Sequence[int]) -> bool:
+        return prefix_key(tokens) in self._entries
+
+    @property
+    def device_bytes_used(self) -> int:
+        return sum(e.state_bytes + e.page_bytes
+                   for e in self._entries.values() if not e.on_host)
+
+    @property
+    def host_bytes_used(self) -> int:
+        return sum(e.state_bytes for e in self._entries.values()
+                   if e.on_host)
+
+    @property
+    def stats(self) -> dict:
+        total = self.hits + self.misses
+        return {"prefix_entries": len(self._entries),
+                "prefix_hits": self.hits,
+                "prefix_misses": self.misses,
+                "prefix_hit_rate": self.hits / total if total else 0.0,
+                "prefix_captures": self.captures,
+                "prefix_demotions": self.demotions,
+                "prefix_evictions": self.evictions,
+                "prefix_device_bytes": self.device_bytes_used,
+                "prefix_host_bytes": self.host_bytes_used}
+
+    # -- lookup -----------------------------------------------------------
+
+    def match(self, prompt: Sequence[int]) -> Optional[_Entry]:
+        """Longest cached prefix of ``prompt`` that leaves >= 1 prompt
+        token unprefilled. Verifies tokens (not just the hash), bumps
+        the entry's LRU tick, and counts a hit or miss."""
+        if not self._entries:
+            self.misses += 1
+            return None
+        limit = len(prompt) - 1
+        bt = self.cfg.block_tokens
+        cands = {n for n in self._lengths if n <= limit}
+        cands.update(n for n in range(bt, limit + 1, bt))
+        for n in sorted(cands, reverse=True):
+            ent = self._entries.get(prefix_key(prompt[:n]))
+            if ent is not None and ent.tokens == tuple(prompt[:n]):
+                self._tick += 1
+                ent.tick = self._tick
+                self.hits += 1
+                return ent
+        self.misses += 1
+        return None
+
+    def device_state(self, ent: _Entry):
+        """The entry's snapshot on device, promoting a host-tier entry
+        (and re-balancing the device budget) if needed."""
+        if ent.on_host:
+            ent.state = self._to_device(ent.state)
+            ent.on_host = False
+            self._rebalance()
+        return ent.state
+
+    # -- insert / evict ---------------------------------------------------
+
+    def put(self, tokens: Sequence[int], state, *,
+            pages: Optional[list[int]] = None,
+            page_bytes: int = 0) -> None:
+        """Capture a snapshot for ``tokens``. ``state`` is a 1-row
+        detached serve state gathered from the staging pool; ``pages``
+        (exact paged only) are the physical page ids covering the
+        prefix, already retained by the caller."""
+        key = prefix_key(tokens)
+        if key in self._entries:            # concurrent duplicate capture
+            if pages is not None and self._release_pages is not None:
+                self._release_pages(pages)
+            return
+        self._tick += 1
+        ent = _Entry(key, tuple(int(t) for t in tokens), state,
+                     _tree_bytes(state), page_bytes, pages, self._tick)
+        self._entries[key] = ent
+        n = len(ent.tokens)
+        self._lengths[n] = self._lengths.get(n, 0) + 1
+        self.captures += 1
+        self._rebalance()
+
+    def _drop(self, ent: _Entry) -> None:
+        del self._entries[ent.key]
+        n = len(ent.tokens)
+        self._lengths[n] -= 1
+        if not self._lengths[n]:
+            del self._lengths[n]
+        if ent.pages is not None and self._release_pages is not None:
+            self._release_pages(ent.pages)
+        self.evictions += 1
+
+    def _rebalance(self) -> None:
+        """Demote LRU device entries past ``device_bytes``, then evict
+        LRU host entries past ``host_bytes``. Paged entries keep their
+        KV pages resident on device either way, so their page bytes
+        count against the device budget until eviction."""
+        dev = [e for e in self._entries.values() if not e.on_host]
+        dev.sort(key=lambda e: e.tick)
+        used = sum(e.state_bytes + e.page_bytes for e in dev)
+        for e in dev:
+            if used <= self.cfg.device_bytes:
+                break
+            used -= e.state_bytes + e.page_bytes
+            if e.page_bytes:
+                # demoting cannot free resident pages — evict instead
+                self._drop(e)
+                continue
+            e.state = self._to_host(e.state)
+            e.on_host = True
+            self.demotions += 1
+        host = [e for e in self._entries.values() if e.on_host]
+        host.sort(key=lambda e: e.tick)
+        used = sum(e.state_bytes for e in host)
+        for e in host:
+            if used <= self.cfg.host_bytes:
+                break
+            used -= e.state_bytes
+            self._drop(e)
+
+    def reclaim_pages(self, allocator: PageAllocator, need: int) -> bool:
+        """Evict LRU paged entries until ``allocator`` has ``need``
+        free pages (or no paged entries remain). Returns success —
+        False tells the engine to defer the admission (backpressure)."""
+        while allocator.n_free < need:
+            paged = [e for e in self._entries.values()
+                     if e.pages is not None]
+            if not paged:
+                return False
+            self._drop(min(paged, key=lambda e: e.tick))
+        return True
+
+    def clear(self) -> None:
+        for ent in list(self._entries.values()):
+            self._drop(ent)

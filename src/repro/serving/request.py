@@ -109,3 +109,36 @@ def synthetic_requests(n: int, vocab: int, *, seed: int = 0,
             temperature=temperature, top_k=top_k, top_p=top_p,
             arrival_time=t))
     return reqs
+
+
+def shared_prefix_requests(n: int, vocab: int, *, seed: int = 0,
+                           rate: float = 0.0, prefix_len: int = 96,
+                           n_prefixes: int = 1, reuse: float = 0.8,
+                           suffix_range: tuple[int, int] = (16, 32),
+                           gen_range: tuple[int, int] = (16, 32),
+                           temperature: float = 0.0) -> list[Request]:
+    """Prefix-heavy request stream: a ``reuse`` fraction of requests
+    open with one of ``n_prefixes`` shared ``prefix_len``-token prompts
+    (the system-prompt / few-shot template traffic shape the prefix
+    cache targets — benchmarks/serve_latency.py part 6) followed by a
+    private random suffix; the rest are fully random control prompts of
+    the same total length. ``rate`` spaces arrivals like
+    :func:`synthetic_requests`."""
+    rng = random.Random(seed)
+    prefixes = [[rng.randrange(vocab) for _ in range(prefix_len)]
+                for _ in range(n_prefixes)]
+    t, reqs = 0.0, []
+    for _ in range(n):
+        if rate > 0:
+            t += rng.expovariate(rate)
+        suffix = [rng.randrange(vocab)
+                  for _ in range(rng.randint(*suffix_range))]
+        if rng.random() < reuse:
+            prompt = rng.choice(prefixes) + suffix
+        else:
+            prompt = [rng.randrange(vocab)
+                      for _ in range(prefix_len)] + suffix
+        reqs.append(Request(prompt=prompt,
+                            max_new_tokens=rng.randint(*gen_range),
+                            temperature=temperature, arrival_time=t))
+    return reqs

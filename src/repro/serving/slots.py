@@ -25,7 +25,8 @@ uniform across the tree:
 
 All engine mutations reduce to the primitives here — multi-index
 gather/scatter (``read_slots`` / ``write_slots``), their single-slot
-dynamic-slice forms, the fused staging-to-pool commit
+forms, the one-row broadcast scatter that seeds admissions and forks
+cached prefixes (``fork_slots``), the fused staging-to-pool commit
 (``merge_slots``), and a masked freeze of inactive slots — each
 written once over that axis map instead of per leaf. ``PackBuffer`` is
 the host-side counterpart: the double-buffered token staging the
@@ -96,23 +97,35 @@ def write_slot(pool: dict, new: dict, idx: Array) -> dict:
     decode chain): its batch axis has size 1 where present, and its
     per-sequence scalars (``pos``, exact ``length``) have one dim less
     than the pool leaf — those are unsqueezed at the slot axis first.
+    Thin wrapper over :func:`write_slots` with a length-1 index vector.
     """
-    def _write(p, n, axis):
+    def _expand(p, n, axis):
         n = jnp.asarray(n)
-        if n.ndim < p.ndim:
-            n = jnp.expand_dims(n, axis)
-        return jax.lax.dynamic_update_slice_in_dim(
-            p, n.astype(p.dtype), idx, axis=axis)
-    return tree_slot_map(_write, pool, new)
+        return jnp.expand_dims(n, axis) if n.ndim < p.ndim else n
+    return write_slots(pool, tree_slot_map(_expand, pool, new),
+                       jnp.asarray(idx, jnp.int32)[None])
 
 
 def read_slot(pool: dict, idx: Array) -> dict:
     """Gather slot ``idx`` (() int32) back out as a B=1 serve state
     (keeps the size-1 slot axis so the result round-trips through
-    write_slot)."""
-    def _read(p, axis):
-        return jax.lax.dynamic_slice_in_dim(p, idx, 1, axis=axis)
-    return tree_slot_map(_read, pool)
+    write_slot). Thin wrapper over :func:`read_slots` with a length-1
+    index vector."""
+    return read_slots(pool, jnp.asarray(idx, jnp.int32)[None])
+
+
+def fork_slots(pool: dict, row: dict, idx: Array) -> dict:
+    """Broadcast a ONE-row serve state into slots ``idx`` ((P,) int32).
+
+    The fork-on-admit scatter of the prefix cache: every admitted slot's
+    staging row is seeded from the same snapshot — a cached prefix state
+    or the engine's fresh-row template — in one scatter. For PRF kinds
+    the row is the fixed-size (S, z, c) tuple, so forking a prefix into
+    P requests is O(P · state) regardless of how long the prefix is.
+    """
+    k = idx.shape[0]
+    rows = tree_slot_map(lambda p, axis: jnp.repeat(p, k, axis=axis), row)
+    return write_slots(pool, rows, idx)
 
 
 def merge_slots(dst: dict, src: dict, idx: Array) -> dict:

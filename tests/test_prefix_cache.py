@@ -1,0 +1,345 @@
+"""Prefix cache + O(1) state forking (ISSUE 10 tentpole).
+
+The cache makes fork-on-admit a pure scheduling optimization: a forked
+request resumes chunked prefill from the cached cursor on the same
+chunk grid a cold start would use, so its token stream must be
+BITWISE-identical to an engine that never cached anything. These tests
+pin that contract and the store's mechanics:
+
+  * fork parity — greedy and sampled storms of prefix-sharing requests
+    through a cache-on engine vs a cache-less reference, both
+    schedulers, PRF kind (snapshot fork) AND exact kind (paged KV,
+    copy-on-write page-table fork);
+  * the store itself — longest-match + token verification, two-tier
+    LRU order (demote to host before evicting), paged entries evict
+    rather than strand resident pages, page-allocator refcounts;
+  * cancel-after-fork — a forked victim's eviction never perturbs
+    sibling forks of the same entry, and the entry survives for later
+    admissions;
+  * a mesh-sharded engine snapshot round-trip (host demotion →
+    mesh-aware promotion) — runs in the multidevice CI job, skips at
+    1 device.
+"""
+import dataclasses
+import random
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs as cfgs
+from repro.models import lm
+from repro.serving import (NoFreePages, PageAllocator, PrefixCache,
+                           PrefixCacheConfig, Request, ServingEngine)
+
+PC = PrefixCacheConfig(block_tokens=8, page_size=8)
+
+
+def _cfg(kind: str, **kw):
+    cfg = cfgs.get_config("smollm-135m", reduced=True)
+    cfg = cfgs.darkify(cfg, kind, cfg.attn.num_features)
+    return dataclasses.replace(cfg, **kw) if kw else cfg
+
+
+def _params(cfg):
+    return lm.init_params(jax.random.PRNGKey(0), cfg)
+
+
+def _prefix(vocab, n=16, seed=42):
+    rng = random.Random(seed)
+    return [rng.randrange(vocab) for _ in range(n)]
+
+
+def _sharers(vocab, prefix, *, n=5, seed=0, temperature=0.0,
+             sampled_mix=False):
+    """Prefix-sharing requests with PINNED uids so the per-row sample
+    keys (and hence sampled streams) are comparable across engines."""
+    rng = random.Random(seed)
+    reqs = []
+    for i in range(n):
+        kw = {}
+        if sampled_mix and i % 3 == 1:
+            kw = {"top_k": 7, "top_p": 0.9}
+        suffix = [rng.randrange(vocab)
+                  for _ in range(rng.randint(4, 10))]
+        reqs.append(Request(prompt=list(prefix) + suffix,
+                            max_new_tokens=rng.randint(3, 8),
+                            temperature=temperature, uid=5000 + i, **kw))
+    return reqs
+
+
+def _drain(eng, reqs):
+    for r in reqs:
+        eng.submit(r)
+    return {r.uid: list(r.tokens) for r in eng.run()}
+
+
+def _engine(params, cfg, *, cache, overlap=False, mesh=None, slots=3):
+    return ServingEngine(params, cfg, max_slots=slots, max_len=64,
+                         chunk_tokens=8, seed=0, overlap=overlap,
+                         mesh=mesh, prefix_cache=cache)
+
+
+def _primed_engine(params, cfg, prefix, **kw):
+    """Cache-on engine whose store already holds the prefix (one primer
+    request drained through it captures the block-aligned snapshots)."""
+    eng = _engine(params, cfg, cache=PC, **kw)
+    _drain(eng, [Request(prompt=list(prefix) + [1, 2, 3],
+                         max_new_tokens=2, uid=4999)])
+    assert eng.prefix_cache.has(prefix)
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# fork parity: forked streams bitwise-equal to cold-start
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["darkformer", "exact"])
+@pytest.mark.parametrize("overlap", [False, True])
+def test_fork_parity_greedy(kind, overlap):
+    """Greedy prefix-sharing batch: every stream from the primed
+    cache-on engine (every sharer forks the cached prefix) must equal
+    the cache-less reference bitwise — PRF snapshot forks and exact
+    paged copy-on-write forks, both schedulers."""
+    cfg = _cfg(kind)
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab)
+    ref = _drain(_engine(params, cfg, cache=None, overlap=overlap),
+                 _sharers(cfg.vocab, prefix, seed=1))
+    eng = _primed_engine(params, cfg, prefix, overlap=overlap)
+    got = _drain(eng, _sharers(cfg.vocab, prefix, seed=1))
+    st = eng.stats
+    assert st["forked_requests"] >= 5 and st["forked_tokens"] > 0
+    assert st["paged_kv"] == (kind == "exact")
+    assert set(got) == set(ref)
+    for uid in ref:
+        assert got[uid] == ref[uid], uid
+
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_fork_parity_sampled(overlap):
+    """Sampled storm (temperature 0.8, a third of the rows top-k/top-p):
+    the per-row (uid, token-index) sample keys are fork-invariant, so
+    even stochastic forked streams match cold-start bitwise."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab)
+    mk = lambda: _sharers(cfg.vocab, prefix, seed=2, temperature=0.8,
+                          sampled_mix=True)
+    ref = _drain(_engine(params, cfg, cache=None, overlap=overlap), mk())
+    eng = _primed_engine(params, cfg, prefix, overlap=overlap)
+    got = _drain(eng, mk())
+    assert eng.stats["forked_requests"] >= 5
+    for uid in ref:
+        assert got[uid] == ref[uid], uid
+
+
+def test_partial_prefix_match_forks_longest_block():
+    """A prompt sharing only the first block of a longer cached prefix
+    forks from the longest block-aligned snapshot, not the full entry."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab, n=16)
+    eng = _primed_engine(params, cfg, prefix)
+    half = prefix[:8]
+    ref = _drain(_engine(params, cfg, cache=None),
+                 _sharers(cfg.vocab, half, n=2, seed=3))
+    hits0 = eng.stats["prefix_hits"]
+    got = _drain(eng, _sharers(cfg.vocab, half, n=2, seed=3))
+    assert eng.stats["prefix_hits"] == hits0 + 2
+    for uid in ref:
+        assert got[uid] == ref[uid], uid
+
+
+# ---------------------------------------------------------------------------
+# cancel-after-fork
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("overlap", [False, True])
+def test_cancel_after_fork(overlap):
+    """Cancelling one forked request mid-decode must not perturb its
+    sibling forks (they share the entry, not mutable state), and the
+    cached entry must keep serving later admissions."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab)
+    reqs = _sharers(cfg.vocab, prefix, seed=4)
+    ref = _drain(_engine(params, cfg, cache=None, overlap=overlap), reqs)
+
+    eng = _primed_engine(params, cfg, prefix, overlap=overlap)
+    reqs = _sharers(cfg.vocab, prefix, seed=4)
+    victim = reqs[0]
+    seen = []
+
+    def hook(tok, t):
+        seen.append(tok)
+        if len(seen) == 2:
+            eng.cancel(victim.uid)
+    victim.on_token = hook
+    got = _drain(eng, reqs)
+    assert len(seen) == 2                      # in-flight work dropped
+    for uid in ref:
+        if uid != victim.uid:
+            assert got[uid] == ref[uid], uid
+    # the entry survives the cancel: a late admission still forks
+    hits0 = eng.stats["prefix_hits"]
+    late = _drain(eng, _sharers(cfg.vocab, prefix, n=1, seed=5))
+    assert eng.stats["prefix_hits"] == hits0 + 1
+    assert late
+
+
+# ---------------------------------------------------------------------------
+# the store: LRU tiers, verification, allocator
+# ---------------------------------------------------------------------------
+
+def _state(fill, n=256):
+    return {"s": np.full((n,), fill, np.float32)}
+
+
+def test_lru_demote_then_evict_order():
+    """Strict LRU across both tiers: device overflow demotes the
+    least-recently-used entries to host (in tick order), host overflow
+    evicts them — and a match() bump rescues an entry from demotion."""
+    nbytes = _state(0.0)["s"].nbytes
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4,
+                                       device_bytes=2 * nbytes,
+                                       host_bytes=nbytes),
+                     to_host=lambda t: t, to_device=lambda t: t)
+    a, b, c, d = ([10 + i] * 4 for i in range(4))
+    pc.put(a, _state(1.0))
+    pc.put(b, _state(2.0))
+    assert pc.match(a + [0]) is not None       # bump a: b is now LRU
+    pc.put(c, _state(3.0))                     # device full -> demote b
+    st = pc.stats
+    assert st["prefix_demotions"] == 1 and st["prefix_evictions"] == 0
+    assert st["prefix_device_bytes"] == 2 * nbytes
+    assert st["prefix_host_bytes"] == nbytes
+    pc.put(d, _state(4.0))                     # demote a -> host full
+    st = pc.stats                              # -> evict b (host LRU)
+    assert st["prefix_demotions"] == 2 and st["prefix_evictions"] == 1
+    assert not pc.has(b) and pc.has(a) and pc.has(c) and pc.has(d)
+    # promoting the host-tier survivor re-balances the device tier
+    ent = pc.match(a + [0])
+    out = pc.device_state(ent)
+    np.testing.assert_array_equal(out["s"], _state(1.0)["s"])
+    assert pc.stats["prefix_demotions"] == 3   # c or d made room
+
+
+def test_match_verifies_tokens_and_respects_limit():
+    """match() never returns a whole-prompt entry (>= 1 token must stay
+    unprefilled) and verifies stored tokens, not just the hash."""
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4),
+                     to_host=lambda t: t, to_device=lambda t: t)
+    toks = [1, 2, 3, 4]
+    pc.put(toks, _state(1.0))
+    assert pc.match(toks) is None              # nothing left to prefill
+    assert pc.match(toks + [9]) is not None
+    assert pc.match([1, 2, 3, 5, 6]) is None   # differing 4th token
+    # stats counted: 2 misses, 1 hit
+    assert pc.stats["prefix_hits"] == 1
+    assert pc.stats["prefix_misses"] == 2
+
+
+def test_paged_entries_evict_not_demote():
+    """A paged entry's KV pages stay device-resident, so the rebalancer
+    must EVICT it (releasing its pages) instead of demoting it."""
+    released = []
+    nbytes = _state(0.0)["s"].nbytes
+    alloc = PageAllocator(8)
+
+    def _release(ids):
+        released.extend(ids)
+        alloc.release(ids)
+
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4,
+                                       device_bytes=2 * nbytes),
+                     to_host=lambda t: t, to_device=lambda t: t,
+                     release_pages=_release)
+    pages = alloc.alloc(2)
+    pc.put([1] * 4, _state(1.0), pages=pages, page_bytes=nbytes)
+    pc.put([2] * 4, _state(2.0))
+    pc.put([3] * 4, _state(3.0))               # overflow: paged LRU out
+    st = pc.stats
+    assert st["prefix_evictions"] == 1 and st["prefix_demotions"] == 0
+    assert released == pages and alloc.n_free == 7
+    assert not pc.has([1] * 4)
+
+
+def test_page_allocator_refcounts():
+    """retain/release move refcounts; pages free only at zero; page 0
+    is never handed out; exhaustion raises before mutating."""
+    alloc = PageAllocator(4)
+    ids = alloc.alloc(3)
+    assert 0 not in ids and alloc.n_free == 0
+    alloc.retain(ids[:1])
+    alloc.release(ids)                         # ids[0] still retained
+    assert alloc.n_free == 2
+    with pytest.raises(NoFreePages):
+        alloc.alloc(3)
+    assert alloc.n_free == 2                   # alloc failed atomically
+    alloc.release(ids[:1])
+    assert alloc.n_free == 3
+
+
+def test_reclaim_pages_backpressure():
+    """reclaim_pages evicts LRU paged entries until the pool can serve
+    the request, and reports failure (engine defers) when it can't."""
+    alloc = PageAllocator(6)
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4),
+                     to_host=lambda t: t, to_device=lambda t: t,
+                     release_pages=alloc.release)
+    pc.put([1] * 4, _state(1.0), pages=alloc.alloc(3), page_bytes=1)
+    pc.put([2] * 4, _state(2.0), pages=alloc.alloc(2), page_bytes=1)
+    assert pc.reclaim_pages(alloc, 3)          # evicts the LRU entry
+    assert alloc.n_free == 3 and not pc.has([1] * 4)
+    assert not pc.reclaim_pages(alloc, 6)      # even empty can't serve
+    assert len(pc) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine stats surface
+# ---------------------------------------------------------------------------
+
+def test_engine_stats_surface():
+    cfg = _cfg("exact")
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab)
+    eng = _primed_engine(params, cfg, prefix)
+    _drain(eng, _sharers(cfg.vocab, prefix, n=2, seed=6))
+    st = eng.stats
+    assert st["paged_kv"] is True
+    for key in ("prefix_hit_rate", "prefix_captures", "forked_tokens",
+                "prefix_device_bytes", "kv_page_size", "kv_pages_total",
+                "kv_pages_free"):
+        assert key in st, key
+    assert 0 < st["kv_pages_free"] < st["kv_pages_total"]
+
+
+# ---------------------------------------------------------------------------
+# mesh-sharded snapshots (multidevice CI job)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >= 2 devices (multidevice CI job)")
+def test_mesh_sharded_snapshot_roundtrip():
+    """Cache-on engine over a mesh-sharded slot pool: snapshots are
+    captured sharded, demoted to host numpy, and promoted back through
+    the mesh-aware ``to_device`` — forked streams must still equal the
+    unsharded cache-less reference bitwise."""
+    from repro.launch.mesh import make_local_mesh
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab)
+    ref = _drain(_engine(params, cfg, cache=None, slots=4),
+                 _sharers(cfg.vocab, prefix, seed=7))
+    mesh = make_local_mesh(2, 1)
+    eng = _primed_engine(params, cfg, prefix, mesh=mesh, slots=4)
+    # force the captured entries through the host tier so the promote
+    # path (mesh-aware device_put) is what serves the forks
+    for ent in eng.prefix_cache._entries.values():
+        ent.state = jax.device_get(ent.state)
+        ent.on_host = True
+    got = _drain(eng, _sharers(cfg.vocab, prefix, seed=7))
+    assert eng.stats["forked_requests"] >= 5
+    for uid in ref:
+        assert got[uid] == ref[uid], uid
