@@ -251,6 +251,20 @@ class ServingEngine:
         if prefix_cache is True:
             prefix_cache = PrefixCacheConfig()
         self._pc_cfg: Optional[PrefixCacheConfig] = prefix_cache or None
+        # snapshots are captured only when a prefill cursor lands
+        # EXACTLY on a block_tokens multiple — with a block_tokens that
+        # does not divide chunk_tokens the chunk grants can step over
+        # every boundary, silently capturing nothing (no hits, and the
+        # documented fork-parity guarantee assumes the alignment), so
+        # reject the combination instead of relying on the docstring
+        # convention
+        if (self._pc_cfg is not None and chunk_tokens is not None
+                and chunk_tokens % self._pc_cfg.block_tokens):
+            raise ValueError(
+                f"prefix-cache block_tokens={self._pc_cfg.block_tokens}"
+                f" must divide chunk_tokens={chunk_tokens}: capture "
+                "points fire only when a prefill cursor lands on a "
+                "block boundary (docs/serving.md §prefix cache)")
         # with a prefix cache, exact configs switch the pools to the
         # block-granular paged-KV layout: rows hold page TABLES over a
         # shared page pool, so a cached prefix's pages can be shared
@@ -759,8 +773,8 @@ class ServingEngine:
         page is queued for a copy-on-write duplication, and fresh pages
         cover the rest of prompt + generation budget. Returns (table
         (max_pages,) int32, owned page ids, [(src, dst)] tail copies).
-        Raises NoFreePages (after trying a cache reclaim) to defer the
-        admission."""
+        Raises NoFreePages (after trying a cache reclaim, with the
+        match's own refcounts unwound) to defer the admission."""
         ps = self._page_size
         budget = min(req.max_new_tokens, self.max_len - len(req.prompt))
         n_total = -(-(len(req.prompt) + budget) // ps)
@@ -769,10 +783,25 @@ class ServingEngine:
         tail_src = (ent.pages[n_shared]
                     if ent is not None and len(ent.tokens) % ps else None)
         n_new = n_total - n_shared
-        if n_new > self._alloc.n_free:
-            self.prefix_cache.reclaim_pages(self._alloc, n_new)
-        fresh = self._alloc.alloc(n_new)          # raises NoFreePages
-        self._alloc.retain(shared)
+        # Pin the match BEFORE any reclaim/alloc: without exclude=ent a
+        # reclaim could evict the very entry being forked, dropping its
+        # pages into the LIFO free list where alloc() re-issues them as
+        # this request's writable growth pages (double-booked prefix
+        # pages, silent KV corruption). The retains double as the
+        # slot's own refs on the fully shared pages; the extra tail-src
+        # ref keeps the CoW source alive even if a later admission in
+        # the same batch evicts the entry — _admissions releases it
+        # once the batched copy is dispatched.
+        pinned = shared + ([] if tail_src is None else [tail_src])
+        self._alloc.retain(pinned)
+        try:
+            if n_new > self._alloc.n_free:
+                self.prefix_cache.reclaim_pages(self._alloc, n_new,
+                                                exclude=ent)
+            fresh = self._alloc.alloc(n_new)      # raises NoFreePages
+        except NoFreePages:
+            self._alloc.release(pinned)
+            raise
         copies = [] if tail_src is None else [(tail_src, fresh[0])]
         own = shared + fresh
         table = np.zeros(self._max_pages, np.int32)
@@ -855,6 +884,10 @@ class ServingEngine:
                                          jnp.int32),
                 jnp.asarray([d for _, d in copies], jnp.int32))
             self._dispatch_seq += 1
+            # drop the tail-src pins taken in _paged_admit_pages: the
+            # copies are enqueued, and dispatch order protects their
+            # source contents from any later page reuse
+            self._alloc.release([s for s, _ in copies])
         if fresh_adm:
             self._seed(self._fresh_row, fresh_adm, fresh_tables)
         for ent, idxs, tables in forks.values():

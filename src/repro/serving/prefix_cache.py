@@ -15,9 +15,9 @@ This module owns the store; the engine owns the fork
     can never splice the wrong state into a request. Snapshots are
     captured when a request's prefill cursor crosses a
     ``block_tokens``-aligned boundary (and, optionally, at prompt
-    completion — the multi-turn case), so candidate match lengths are
-    the aligned boundaries plus whatever full-prompt lengths the store
-    holds. A match must leave at least one prompt token unprefilled
+    completion — the multi-turn case); lookups try exactly the prefix
+    lengths present in the store, longest first, hashing them in one
+    rolling pass. A match must leave at least one prompt token unprefilled
     (the engine samples the first output token from real final-chunk
     logits, never from a cached state).
   * **Tiers** — snapshots are born on DEVICE (they are gathered out of
@@ -220,16 +220,28 @@ class PrefixCache:
     def match(self, prompt: Sequence[int]) -> Optional[_Entry]:
         """Longest cached prefix of ``prompt`` that leaves >= 1 prompt
         token unprefilled. Verifies tokens (not just the hash), bumps
-        the entry's LRU tick, and counts a hit or miss."""
-        if not self._entries:
+        the entry's LRU tick, and counts a hit or miss.
+
+        Candidate lengths are exactly the prefix lengths present in the
+        store (a length with no entry can never match), and all of
+        their keys come out of ONE rolling blake2b pass over the
+        prompt — O(len + candidates) work per lookup instead of
+        rehashing every block-aligned prefix from scratch."""
+        limit = len(prompt) - 1
+        cands = sorted(n for n in self._lengths if n <= limit)
+        if not cands:
             self.misses += 1
             return None
-        limit = len(prompt) - 1
-        bt = self.cfg.block_tokens
-        cands = {n for n in self._lengths if n <= limit}
-        cands.update(n for n in range(bt, limit + 1, bt))
-        for n in sorted(cands, reverse=True):
-            ent = self._entries.get(prefix_key(prompt[:n]))
+        buf = np.asarray(prompt[:cands[-1]], np.int32).tobytes()
+        roll = hashlib.blake2b(digest_size=16)
+        keys: dict[int, str] = {}
+        prev = 0
+        for n in cands:
+            roll.update(buf[4 * prev:4 * n])
+            prev = n
+            keys[n] = roll.copy().hexdigest()
+        for n in reversed(cands):
+            ent = self._entries.get(keys[n])
             if ent is not None and ent.tokens == tuple(prompt[:n]):
                 self._tick += 1
                 ent.tick = self._tick
@@ -308,13 +320,18 @@ class PrefixCache:
             used -= e.state_bytes
             self._drop(e)
 
-    def reclaim_pages(self, allocator: PageAllocator, need: int) -> bool:
+    def reclaim_pages(self, allocator: PageAllocator, need: int, *,
+                      exclude: Optional[_Entry] = None) -> bool:
         """Evict LRU paged entries until ``allocator`` has ``need``
-        free pages (or no paged entries remain). Returns success —
-        False tells the engine to defer the admission (backpressure)."""
+        free pages (or no evictable paged entries remain). ``exclude``
+        pins one entry — the prefix the caller is about to fork from —
+        outside the eviction scan, so a reclaim can never drop the very
+        pages the admission is sharing and hand them back out of the
+        free list as writable growth pages. Returns success — False
+        tells the engine to defer the admission (backpressure)."""
         while allocator.n_free < need:
             paged = [e for e in self._entries.values()
-                     if e.pages is not None]
+                     if e.pages is not None and e is not exclude]
             if not paged:
                 return False
             self._drop(min(paged, key=lambda e: e.tick))

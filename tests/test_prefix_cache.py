@@ -281,6 +281,40 @@ def test_page_allocator_refcounts():
     assert alloc.n_free == 3
 
 
+def test_match_unaligned_final_capture_length():
+    """A capture_final entry at a non-block-aligned length is still a
+    match candidate: candidates come from the lengths actually stored,
+    not just the block grid — and the longest one wins."""
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4),
+                     to_host=lambda t: t, to_device=lambda t: t)
+    pc.put([5, 6, 7, 8, 9, 10], _state(1.0))       # len 6: unaligned
+    pc.put([5, 6, 7, 8], _state(2.0))
+    ent = pc.match([5, 6, 7, 8, 9, 10, 11])
+    assert ent is not None and len(ent.tokens) == 6
+
+
+def test_match_hashes_in_one_rolling_pass(monkeypatch):
+    """match() hashes the prompt ONCE (rolling digest, copied at each
+    stored length), not once per block-aligned candidate — a miss on a
+    long prompt costs O(len) blake2b work, not O(len^2/block_tokens)."""
+    from repro.serving import prefix_cache as pc_mod
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4),
+                     to_host=lambda t: t, to_device=lambda t: t)
+    for n in (4, 8, 16):
+        pc.put(list(range(n)), _state(float(n)))
+    calls = []
+    real = pc_mod.hashlib.blake2b
+    monkeypatch.setattr(
+        pc_mod.hashlib, "blake2b",
+        lambda *a, **k: calls.append(1) or real(*a, **k))
+    ent = pc.match(list(range(16)) + [99] * 400)    # hit at length 16
+    assert ent is not None and len(ent.tokens) == 16
+    assert len(calls) == 1
+    calls.clear()
+    assert pc.match([77] * 400) is None             # long-prompt miss
+    assert len(calls) == 1
+
+
 def test_reclaim_pages_backpressure():
     """reclaim_pages evicts LRU paged entries until the pool can serve
     the request, and reports failure (engine defers) when it can't."""
@@ -294,6 +328,67 @@ def test_reclaim_pages_backpressure():
     assert alloc.n_free == 3 and not pc.has([1] * 4)
     assert not pc.reclaim_pages(alloc, 6)      # even empty can't serve
     assert len(pc) == 0
+
+
+def test_reclaim_pages_excludes_pinned_entry():
+    """reclaim_pages(exclude=) never evicts the pinned entry — even as
+    the last remaining paged entry it reports failure (the engine
+    defers the admission) instead of dropping the pages the caller is
+    about to share."""
+    alloc = PageAllocator(6)
+    pc = PrefixCache(PrefixCacheConfig(block_tokens=4),
+                     to_host=lambda t: t, to_device=lambda t: t,
+                     release_pages=alloc.release)
+    a_pages = alloc.alloc(2)
+    pc.put([1] * 4, _state(1.0), pages=a_pages, page_bytes=1)
+    ent = pc.match([1] * 4 + [0])
+    pc.put([2] * 4, _state(2.0), pages=alloc.alloc(2), page_bytes=1)
+    assert not pc.reclaim_pages(alloc, 5, exclude=ent)
+    assert pc.has([1] * 4) and not pc.has([2] * 4)
+    assert alloc.n_free == 3                   # A's 2 pages resident
+    assert all(alloc._ref[p] > 0 for p in a_pages)
+
+
+def test_fork_admission_never_steals_matched_pages():
+    """Exhausted page pool at fork admission: the reclaim must not
+    evict the matched entry itself (pre-fix it could, releasing the
+    shared prefix pages into the LIFO free list where alloc() re-issued
+    them as the SAME request's writable growth pages — a double-booked
+    table silently corrupting the prefix KV). The admission defers
+    cleanly with refcounts unwound, the entry keeps serving, and the
+    retried admission builds a duplicate-free table."""
+    cfg = _cfg("exact")
+    params = _params(cfg)
+    prefix = _prefix(cfg.vocab)
+    eng = _primed_engine(params, cfg, prefix)
+    alloc = eng._alloc
+    ent = eng.prefix_cache.match(list(prefix) + [0])
+    assert ent is not None and len(ent.tokens) == len(prefix)
+    hog = alloc.alloc(alloc.n_free)            # drain the free list
+    req = Request(prompt=list(prefix) + [7] * 8, max_new_tokens=4,
+                  uid=6001)
+    with pytest.raises(NoFreePages):
+        eng._paged_admit_pages(req, ent)
+    # the matched entry survived its own reclaim with pages still owned
+    assert eng.prefix_cache.has(prefix)
+    assert all(alloc._ref[p] > 0 for p in ent.pages)
+    alloc.release(hog)
+    table, own, copies = eng._paged_admit_pages(req, ent)
+    assert len(set(own)) == len(own)           # no double-booked pages
+    assert set(ent.pages).issubset(own)        # prefix pages shared
+    assert all(alloc._ref[p] >= 2 for p in ent.pages)
+
+
+def test_misaligned_block_tokens_rejected():
+    """block_tokens must divide chunk_tokens (capture points fire only
+    on exact block boundaries) — validated at engine init instead of
+    silently capturing nothing."""
+    cfg = _cfg("darkformer")
+    params = _params(cfg)
+    with pytest.raises(ValueError, match="block_tokens"):
+        ServingEngine(params, cfg, max_slots=2, max_len=64,
+                      chunk_tokens=12,
+                      prefix_cache=PrefixCacheConfig(block_tokens=8))
 
 
 # ---------------------------------------------------------------------------
